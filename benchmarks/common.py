@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: timing, synthetic matrices, CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall-time in microseconds of fn(*args) (jit-compiled callers)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def powerlaw_matrix(key, m: int, n: int, decay: float = 1.0, dtype=jnp.float32):
+    """Dense matrix with σ_i ∝ i^-decay (the spectral profile of the paper's
+    dense LIBSVM datasets; offline substitution — see DESIGN.md §8)."""
+    k1, k2 = jax.random.split(key)
+    r = min(m, n)
+    U, _ = jnp.linalg.qr(jax.random.normal(k1, (m, r), dtype))
+    V, _ = jnp.linalg.qr(jax.random.normal(k2, (n, r), dtype))
+    sv = jnp.arange(1, r + 1, dtype=dtype) ** (-decay)
+    return (U * sv[None, :]) @ V.T
+
+
+def sparse_matrix(key, m: int, n: int, density: float = 0.002, dtype=jnp.float32):
+    """Sparse-profile matrix (rcv1/news20 substitution): Bernoulli mask × normal."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (m, n))
+    vals = jax.random.normal(k2, (m, n), dtype)
+    return jnp.where(mask, vals, 0.0)
+
+
+def clustered_points(key, n: int, d: int, n_clusters: int = 10, spread: float = 1.0):
+    """Clustered Gaussian data for RBF kernels (§6.2 datasets substitution)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    centers = jax.random.normal(k1, (n_clusters, d)) * 3.0
+    assign = jax.random.randint(k2, (n,), 0, n_clusters)
+    return centers[assign] + spread * jax.random.normal(k3, (n, d))
+
+
+def tune_rbf_sigma(X, k: int = 15, target_eta: float = 0.7, iters: int = 20) -> float:
+    """Bisect σ so that η = ||K_k||²_F/||K||²_F ≈ target (paper Table 6 protocol)."""
+    from repro.core.spsd import rbf_kernel_oracle
+
+    lo, hi = 1e-6, 1e2
+    for _ in range(iters):
+        mid = float(np.sqrt(lo * hi))
+        K = rbf_kernel_oracle(X, mid)(None, None)
+        ev = jnp.linalg.eigvalsh(K.astype(jnp.float64) if False else K)
+        ev2 = jnp.sort(ev**2)[::-1]
+        eta = float(jnp.sum(ev2[:k]) / jnp.sum(ev2))
+        if eta > target_eta:
+            lo = mid  # kernel too close to low rank? raise sigma decreases eta
+        else:
+            hi = mid
+        if abs(eta - target_eta) < 0.05:
+            return mid
+    return float(np.sqrt(lo * hi))

@@ -1,0 +1,107 @@
+"""Render §Dry-run / §Roofline / §Perf into EXPERIMENTS.md from artifacts."""
+
+import glob
+import json
+import os
+import re
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def terms(r):
+    wire = sum(v["wire_bytes"] for v in r["collectives"].values())
+    c = r["flops_per_device"] / PEAK
+    m = r["hbm_bytes_per_device"] / HBM
+    k = wire / ICI
+    dom = max([("compute", c), ("memory", m), ("collective", k)], key=lambda t: t[1])
+    return c, m, k, dom[0], wire
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | compile s | mem/dev GB | flops/dev | wire/dev GB | collectives |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = load(p)
+        if r.get("tag"):
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    for r in recs:
+        wire = sum(v["wire_bytes"] for v in r["collectives"].values())
+        colls = ", ".join(f"{k}:{int(v['count'])}" for k, v in sorted(r["collectives"].items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{r['memory']['peak_estimate_bytes']/1e9:.1f} | {r['flops_per_device']:.2e} | "
+            f"{wire/1e9:.2f} | {colls} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table():
+    from repro.configs import SHAPES
+
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL TFLOP | useful ratio |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = [load(p) for p in sorted(glob.glob(os.path.join(ART, "*__16x16.json")))]
+    recs = [r for r in recs if not r.get("tag")]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    for r in recs:
+        c, m, k, dom, _ = terms(r)
+        cell = SHAPES[r["shape"]]
+        N = r["n_active_params"]
+        if cell.kind == "train":
+            mf = 6.0 * N * cell.global_batch * cell.seq_len
+        elif cell.kind == "prefill":
+            mf = 2.0 * N * cell.global_batch * cell.seq_len
+        else:
+            mf = 2.0 * N * cell.global_batch
+        ratio = mf / max(r["flops_per_device"] * 256, 1.0)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {c:.3e} | {m:.3e} | {k:.3e} | "
+            f"**{dom}** | {mf/1e12:.1f} | {ratio:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def perf_variants_table():
+    rows = ["| cell / variant | compute s | memory s | collective s | mem/dev GB | vs baseline (c/m/k/mem) |",
+            "|---|---|---|---|---|---|"]
+    cells = [("llama3.2-1b", "train_4k"), ("kimi-k2-1t-a32b", "train_4k"), ("mamba2-1.3b", "prefill_32k")]
+    for arch, shape in cells:
+        base = load(os.path.join(ART, f"{arch}__{shape}__16x16.json"))
+        bc, bm, bk, _, _ = terms(base)
+        bmem = base["memory"]["peak_estimate_bytes"] / 1e9
+        rows.append(f"| **{arch} / {shape} (baseline)** | {bc:.3e} | {bm:.3e} | {bk:.3e} | {bmem:.1f} | — |")
+        for p in sorted(glob.glob(os.path.join(ART, f"{arch}__{shape}__16x16__*.json"))):
+            r = load(p)
+            c, m, k, _, _ = terms(r)
+            mem = r["memory"]["peak_estimate_bytes"] / 1e9
+            rows.append(
+                f"| &nbsp;&nbsp;{r['tag']} | {c:.3e} | {m:.3e} | {k:.3e} | {mem:.1f} | "
+                f"{c/bc:.2f}× / {m/bm:.2f}× / {k/bk:.2f}× / {mem/bmem:.2f}× |"
+            )
+    return "\n".join(rows)
+
+
+def main():
+    with open(EXP) as f:
+        text = f.read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    text = text.replace("<!-- PERF_TABLE -->", perf_variants_table())
+    with open(EXP, "w") as f:
+        f.write(text)
+    print("rendered tables into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""§Roofline: three-term roofline per (arch × shape) from dry-run artifacts.
+
+  compute    = flops_per_device / 197 TFLOP/s          (v5e bf16 peak)
+  memory     = hbm_bytes_per_device / 819 GB/s         (v5e HBM BW)
+  collective = wire_bytes_per_device / 50 GB/s         (ICI, ring-adjusted
+               per-op wire bytes; see launch/hlo_census.py)
+
+flops / hbm_bytes / wire_bytes come from the loop-aware HLO census of the
+*compiled per-device module* (XLA's own cost_analysis counts while bodies
+once — verified and documented; both numbers are in the artifacts).
+
+MODEL_FLOPS = 6·N·T (train), 2·N·T (prefill), 2·N·B (decode step), with
+N = active params for MoE. The useful-compute ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat recompute and attention/dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link (assignment constant; 1 effective link — conservative)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def model_flops_global(rec: dict, shapes: dict) -> float:
+    cell = shapes[rec["shape"]]
+    N = rec["n_active_params"]
+    if cell.kind == "train":
+        return 6.0 * N * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * N * cell.global_batch * cell.seq_len
+    return 2.0 * N * cell.global_batch  # decode: one token per sequence
+
+
+def terms(rec: dict) -> dict:
+    compute = rec["flops_per_device"] / PEAK_FLOPS
+    memory = rec["hbm_bytes_per_device"] / HBM_BW
+    wire = sum(v["wire_bytes"] for v in rec["collectives"].values())
+    collective = wire / ICI_BW
+    dom = max(("compute", compute), ("memory", memory), ("collective", collective), key=lambda t: t[1])
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dom[0],
+        "bound_s": dom[1],
+        "wire_gb": wire / 1e9,
+    }
+
+
+def load_records(mesh: str = "16x16", tag: str = ""):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}{('__' + tag) if tag else ''}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def advice(rec: dict, t: dict) -> str:
+    if t["dominant"] == "collective":
+        ag = rec["collectives"].get("all-gather", {}).get("wire_bytes", 0)
+        ar = rec["collectives"].get("all-reduce", {}).get("wire_bytes", 0)
+        if ag > ar:
+            return "all-gather bound: reduce FSDP regathers (bigger TP share / persistent gathered weights / EP dispatch)"
+        return "all-reduce bound: bf16 grad reduction, GMR gradient compression, fewer activation psums"
+    if t["dominant"] == "memory":
+        return "HBM bound: fuse sketches (Pallas), bf16 moments, cut remat re-reads / logit round-trips"
+    ratio = model_flops_global(rec, _shapes()) / max(rec["flops_per_device"] * _chips(rec), 1.0)
+    if ratio < 0.5:
+        return "compute bound w/ low useful ratio: reduce remat refwd, trim attention/dispatch overcompute"
+    return "compute bound near model flops: healthy; next win is overlap of collectives with compute"
+
+
+def _chips(rec) -> int:
+    return 512 if rec["mesh"] == "2x16x16" else 256
+
+
+def _shapes():
+    from repro.configs import SHAPES
+
+    return SHAPES
+
+
+def build_table(mesh: str = "16x16", tag: str = "") -> str:
+    shapes = _shapes()
+    recs = load_records(mesh, tag)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | mem/dev GB | MODEL_TFLOP | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        t = terms(r)
+        mf = model_flops_global(r, shapes)
+        hlo_global = r["flops_per_device"] * _chips(r)
+        ratio = mf / max(hlo_global, 1.0)
+        mem = r["memory"]["peak_estimate_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+            f"{t['collective_s']:.3e} | **{t['dominant']}** | {mem:.1f} | {mf/1e12:.1f} | "
+            f"{ratio:.2f} | {advice(r, t)} |"
+        )
+    return "\n".join(lines)
+
+
+def run(trials: int = 1, quick: bool = False) -> list:
+    rows = []
+    shapes = _shapes()
+    for mesh in ("16x16", "2x16x16"):
+        for r in load_records(mesh):
+            t = terms(r)
+            mf = model_flops_global(r, shapes)
+            ratio = mf / max(r["flops_per_device"] * _chips(r), 1.0)
+            rows.append({
+                "name": f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+                "us_per_call": round(t["bound_s"] * 1e6, 1),  # roofline-bound step time
+                "derived": (
+                    f"dominant={t['dominant']};compute_s={t['compute_s']:.3e};"
+                    f"memory_s={t['memory_s']:.3e};collective_s={t['collective_s']:.3e};"
+                    f"useful_ratio={ratio:.2f};mem_gb={r['memory']['peak_estimate_bytes']/1e9:.1f}"
+                ),
+            })
+    if not rows:
+        rows.append({"name": "roofline/NO_ARTIFACTS", "us_per_call": 0.0,
+                     "derived": "run `python -m repro.launch.dryrun --all --both-meshes` first"})
+    return rows
+
+
+if __name__ == "__main__":
+    print(build_table("16x16"))

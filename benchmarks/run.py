@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only gmr_error,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (the skeleton contract).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sweeps for CI")
+    ap.add_argument("--only", default="", help="comma-separated module subset")
+    args = ap.parse_args()
+
+    from . import gmr_error, roofline, single_pass_svd, sketch_perf, spsd_approx
+
+    modules = {
+        "gmr_error": gmr_error,        # paper Fig. 1  (§6.1)
+        "spsd_approx": spsd_approx,    # paper Fig. 2 + Table 7 (§6.2)
+        "single_pass_svd": single_pass_svd,  # paper Fig. 3 (§6.3)
+        "sketch_perf": sketch_perf,    # kernel layer
+        "roofline": roofline,          # §Roofline terms from dry-run artifacts
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — surface per-module failures in CSV
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for row in rows:
+            derived = str(row["derived"]).replace(",", ";")
+            print(f"{row['name']},{row['us_per_call']},{derived}")
+        print(f"{name}/_total,{(time.time()-t0)*1e6:.0f},module_wall_time", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

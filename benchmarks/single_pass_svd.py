@@ -1,0 +1,64 @@
+"""Paper §6.3 / Figure 3: single-pass SVD comparison.
+
+Fast SP-SVD (**Algorithm 3**, streaming) vs Practical SP-SVD (Tropp et al.
+2017, Algorithm 4). Protocol: k = 10, c = r = f·k/2 with (c+r)/k ∈
+{4..12}; Fast SP-SVD inner sketches s = 3c√a (paper §6.3); error ratio
+= ||A − UΣVᵀ||_F / ||A − A_k||_F − 1 (can be negative: ranks exceed k).
+
+Claim validated: Fast SP-SVD ≪ Practical SP-SVD at equal sketch budget,
+dramatically so at small budgets (§5.3's ill-conditioning of N' at c = r);
+we also report Tropp's recommended asymmetric r = 2c allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fast_sp_svd, practical_sp_svd, svd_error_ratio
+
+from .common import powerlaw_matrix, sparse_matrix, time_call
+
+
+DATASETS = {
+    "dense-powerlaw1.0": lambda key: powerlaw_matrix(key, 2500, 2000, 1.0),
+    "dense-powerlaw0.7": lambda key: powerlaw_matrix(key, 3000, 1500, 0.7),
+    "sparse-0.2%": lambda key: sparse_matrix(key, 4000, 3000, 0.002),
+}
+
+
+def run(trials: int = 2, quick: bool = False) -> list:
+    rows = []
+    k = 10
+    factors = [4, 8] if quick else [4, 6, 8, 10, 12]
+    for ds, make in DATASETS.items():
+        A = make(jax.random.key(hash(ds) % 2**31))
+        for f in factors:
+            c = r = f * k // 2
+            a = f / 2
+            s = int(3 * c * np.sqrt(a))
+            sizes = dict(c=c, r=r, c0=3 * c, r0=3 * r, s_c=s, s_r=s)
+            e_fast, e_prac, e_prac2 = [], [], []
+            for t in range(trials):
+                U, S, V = fast_sp_svd(jax.random.key(500 + t), A, sizes=sizes, panel=512)
+                e_fast.append(float(svd_error_ratio(A, U, S, V, k)))
+                U, S, V = practical_sp_svd(jax.random.key(600 + t), A, c=c, r=r)
+                e_prac.append(float(svd_error_ratio(A, U, S, V, k)))
+                # Tropp-recommended asymmetric allocation, same total budget
+                c2 = max(k, (c + r) // 3)
+                U, S, V = practical_sp_svd(jax.random.key(700 + t), A, c=c2, r=2 * c2)
+                e_prac2.append(float(svd_error_ratio(A, U, S, V, k)))
+            us = time_call(
+                lambda key: fast_sp_svd(key, A, sizes=sizes, panel=512), jax.random.key(0), iters=1
+            )
+            rows.append({
+                "name": f"spsvd/{ds}/(c+r)/k={f}",
+                "us_per_call": round(us, 1),
+                "derived": (
+                    f"fast={np.mean(e_fast):.4f};practical_cr={np.mean(e_prac):.4f};"
+                    f"practical_r2c={np.mean(e_prac2):.4f};"
+                    f"fast_wins={np.mean(e_fast) < min(np.mean(e_prac), np.mean(e_prac2))}"
+                ),
+            })
+    return rows

@@ -1,0 +1,67 @@
+"""Kernel-layer benchmark: Pallas kernels vs pure-jnp oracles.
+
+On this CPU container the Pallas bodies execute in interpret mode (Python)
+— wall-time there is meaningless, so we report (i) correctness deltas vs
+the ref oracle, (ii) XLA wall-time of the oracle path (the deployable CPU
+fallback), and (iii) the *structural* HBM-traffic model of the fused
+kernel vs the sequential evaluation — the quantity that decides TPU perf
+(memory-bound regime; see kernels/twoside_sketch.py docstring).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref
+
+from .common import time_call
+
+
+def _traffic_model(m, n, s_c, s_r, dtype_bytes=2):
+    fused = (m * n + m * s_c + n * s_r + s_c * s_r) * dtype_bytes
+    sequential = (m * n + m * s_c + 2 * s_c * n + n * s_r + s_c * s_r) * dtype_bytes
+    return fused, sequential
+
+
+def run(trials: int = 3, quick: bool = False) -> list:
+    rows = []
+    shapes = [(256, 2048, 2048, 256)] if quick else [
+        (128, 1024, 1024, 128),
+        (256, 2048, 2048, 256),
+        (256, 4096, 8192, 256),
+    ]
+    for s_c, m, n, s_r in shapes:
+        ks = jax.random.split(jax.random.key(0), 3)
+        Sc = jax.random.normal(ks[0], (s_c, m), jnp.float32)
+        A = jax.random.normal(ks[1], (m, n), jnp.float32)
+        SrT = jax.random.normal(ks[2], (n, s_r), jnp.float32)
+        out = twoside_sketch(Sc, A, SrT)
+        ref = twoside_sketch_ref(Sc, A, SrT)
+        rel = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+        us_ref = time_call(jax.jit(twoside_sketch_ref), Sc, A, SrT)
+        fused, seq = _traffic_model(m, n, s_c, s_r)
+        rows.append({
+            "name": f"kernel/twoside/{s_c}x{m}x{n}x{s_r}",
+            "us_per_call": round(us_ref, 1),
+            "derived": f"pallas_rel_err={rel:.2e};hbm_fused={fused/1e6:.1f}MB;"
+                       f"hbm_seq={seq/1e6:.1f}MB;traffic_save={seq/fused:.2f}x",
+        })
+
+    cs_shapes = [(256, 4096, 1024)] if quick else [(128, 2048, 512), (256, 4096, 1024), (512, 8192, 2048)]
+    for s, m, n in cs_shapes:
+        ks = jax.random.split(jax.random.key(1), 3)
+        h = jax.random.randint(ks[0], (m,), 0, s)
+        sg = jax.random.rademacher(ks[1], (m,), jnp.float32)
+        A = jax.random.normal(ks[2], (m, n), jnp.float32)
+        out = countsketch_apply(h, sg, A, s)
+        ref = countsketch_ref(h, sg, A, s)
+        rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-30))
+        us_ref = time_call(jax.jit(countsketch_ref, static_argnums=3), h, sg, A, s)
+        rows.append({
+            "name": f"kernel/countsketch/s{s}_{m}x{n}",
+            "us_per_call": round(us_ref, 1),
+            "derived": f"pallas_rel_err={rel:.2e};hbm_passes_over_A=1",
+        })
+    return rows

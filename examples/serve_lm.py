@@ -1,0 +1,31 @@
+"""Batched serving example: prefill + decode a smoke-scale model on an
+8-device (data×model) mesh.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-12b]
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "48", "--gen", "24", "--mesh", "4x2",
+    ])
+    print("serve_lm example OK")
+
+
+if __name__ == "__main__":
+    main()

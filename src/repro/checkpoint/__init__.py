@@ -1,0 +1,3 @@
+"""Sharded checkpointing + fault tolerance."""
+from .checkpoint import save, restore, latest_step, list_steps
+from .fault_tolerance import LoopReport, run_resilient_loop

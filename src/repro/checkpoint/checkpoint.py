@@ -1,0 +1,166 @@
+"""Sharded numpy checkpointing with atomic manifests and elastic restore.
+
+Layout:
+  <dir>/step_<N>.tmp/...   (written)  →  os.rename  →  <dir>/step_<N>/
+    manifest.json          step, leaf index {path: {shape, dtype, file}},
+                           extra metadata (data state, PRNG, config name)
+    <leaf files>.npy       one per pytree leaf (host-gathered)
+
+* Atomicity: the manifest-bearing directory only appears under its final
+  name after every array file is fully written (tmp-dir + rename).
+* keep_last_k garbage collection.
+* Elastic restore: arrays are loaded host-side and ``jax.device_put`` with
+  the *target* shardings — the saved mesh shape is irrelevant, so a
+  checkpoint taken on 512 chips restores onto 8 (tested) or vice versa.
+* Async: ``save(..., async_=True)`` snapshots to host then writes on a
+  worker thread (training continues).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SANITIZE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+# numpy-native dtypes round-trip through .npy; ml_dtypes (bfloat16, fp8)
+# come back as void — store those as a uint view + the true name in the manifest
+_NATIVE_DTYPES = {
+    "float64", "float32", "float16", "int64", "int32", "int16", "int8",
+    "uint64", "uint32", "uint16", "uint8", "bool",
+}
+
+
+def _to_savable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _NATIVE_DTYPES:
+        return arr, name, False
+    view = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return view, name, True
+
+
+def _from_saved(arr: np.ndarray, dtype_name: str, viewed: bool):
+    if viewed:
+        return arr.view(np.dtype(dtype_name))
+    return arr
+
+
+def _leaf_name(path) -> str:
+    return _SANITIZE.sub("_", jax.tree_util.keystr(path)).strip("_") or "root"
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def save(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[dict] = None,
+    keep_last: int = 3,
+    async_: bool = False,
+):
+    """Write a checkpoint. Returns the final path (or a Thread if async)."""
+    leaves, _ = _flatten(tree)
+    host = [(path, np.asarray(jax.device_get(leaf))) for path, leaf in leaves]
+
+    def _write():
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        index = {}
+        for path, arr in host:
+            name = _leaf_name(path)
+            fname = name + ".npy"
+            savable, dtype_name, viewed = _to_savable(arr)
+            np.save(os.path.join(tmp, fname), savable)
+            index[jax.tree_util.keystr(path)] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": dtype_name,
+                "viewed": viewed,
+            }
+        manifest = {"step": step, "leaves": index, "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(directory, keep_last)
+        return final
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    return _write()
+
+
+def _gc(directory: str, keep_last: int):
+    steps = sorted(list_steps(directory))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+def list_steps(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, template: Any, *, step: Optional[int] = None, shardings=None):
+    """Load into the structure of ``template`` (values ignored).
+
+    ``shardings``: optional matching pytree of NamedSharding for elastic
+    placement onto the *current* mesh. Returns (tree, manifest_extra, step).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    ckpt = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves, tdef = _flatten(template)
+    shard_leaves = (
+        tdef.flatten_up_to(shardings) if shardings is not None else [None] * len(leaves)
+    )
+    out = []
+    for (path, tmpl), shard in zip(leaves, shard_leaves):
+        key = jax.tree_util.keystr(path)
+        if key not in manifest["leaves"]:
+            raise KeyError(f"checkpoint at step {step} is missing leaf {key}")
+        entry = manifest["leaves"][key]
+        arr = np.load(os.path.join(ckpt, entry["file"]))
+        arr = _from_saved(arr, entry["dtype"], entry.get("viewed", False))
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != template {tmpl.shape}")
+        if shard is not None:
+            out.append(jax.device_put(arr.astype(tmpl.dtype), shard))
+        else:
+            out.append(jax.numpy.asarray(arr, tmpl.dtype))
+    tree = jax.tree_util.tree_unflatten(tdef, out)
+    return tree, manifest.get("extra", {}), step

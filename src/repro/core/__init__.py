@@ -1,0 +1,56 @@
+"""The paper's primary contribution: Fast Generalized Matrix Regression
+(Ye, Wang, Zhang & Zhang, 2019) and its applications, in pure JAX.
+
+Public surface:
+
+* sketching      — the §2.3 sketch families (Gaussian/SRHT/CountSketch/OSNAP/sampling)
+* gmr            — exact GMR + Algorithm 1 (Fast GMR) + Theorem-1 utilities
+* projections    — §3.2 convex projections (Π_sym, Π_PSD)
+* spsd           — §4: Nyström / fast-SPSD (Wang'16b) / **Algorithm 2** / optimal core
+* svd            — §5: **Algorithm 3** streaming Fast SP-SVD + Tropp'17 baseline
+* leverage       — exact & sketched leverage scores
+"""
+
+from .sketching import (
+    ComposedSketch,
+    CountSketch,
+    GaussianSketch,
+    OSNAPSketch,
+    RowSampling,
+    SRHTSketch,
+    draw_sketch,
+    fwht,
+)
+from .gmr import exact_gmr, fast_gmr, fast_gmr_core, rho, error_ratio, sketched_fro_norm
+from .projections import psd_project, sym_project
+from .leverage import approx_leverage_scores, leverage_scores
+from .spsd import (
+    SPSDResult,
+    faster_spsd,
+    fast_spsd_wang,
+    nystrom,
+    optimal_core,
+    rbf_kernel_oracle,
+    spsd_error_ratio,
+)
+from .svd import (
+    fast_sp_svd,
+    practical_sp_svd,
+    sp_svd_finalize,
+    sp_svd_init,
+    sp_svd_sizes,
+    sp_svd_update,
+    svd_error_ratio,
+)
+
+__all__ = [
+    "ComposedSketch", "CountSketch", "GaussianSketch", "OSNAPSketch", "RowSampling",
+    "SRHTSketch", "draw_sketch", "fwht",
+    "exact_gmr", "fast_gmr", "fast_gmr_core", "rho", "error_ratio", "sketched_fro_norm",
+    "psd_project", "sym_project",
+    "approx_leverage_scores", "leverage_scores",
+    "SPSDResult", "faster_spsd", "fast_spsd_wang", "nystrom", "optimal_core",
+    "rbf_kernel_oracle", "spsd_error_ratio",
+    "fast_sp_svd", "practical_sp_svd", "sp_svd_finalize", "sp_svd_init", "sp_svd_sizes",
+    "sp_svd_update", "svd_error_ratio",
+]

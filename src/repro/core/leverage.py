@@ -1,0 +1,41 @@
+"""Leverage scores (paper §2.1 notation; Drineas et al. 2012 estimation).
+
+Row leverage scores of ``A (m×n)``, m ≥ n:  ℓᵢ = ||Q_{i,:}||² where Q is an
+orthonormal basis of range(A). Σℓᵢ = rank(A). Used by Tables 2/3's
+leverage-sampling sketches and by Algorithm 2 step 3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sketching import draw_sketch
+
+__all__ = ["leverage_scores", "approx_leverage_scores"]
+
+
+def leverage_scores(A: jax.Array) -> jax.Array:
+    """Exact row leverage scores via QR — O(m n²)."""
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    Q, _ = jnp.linalg.qr(A.astype(dt))
+    return jnp.sum(Q * Q, axis=1)
+
+
+def approx_leverage_scores(key, A: jax.Array, s: int | None = None) -> jax.Array:
+    """Sketched leverage scores (Drineas et al. 2012).
+
+    ℓ̂ᵢ = ||A_{i,:} · R⁻¹ · G||² with R from QR of a row-sketch S·A and a
+    small Gaussian G for the JL reduction. O(nnz(A) + n³) instead of O(mn²).
+    """
+    m, n = A.shape
+    s = s or min(m, max(4 * n, n + 8))
+    k1, k2 = jax.random.split(key)
+    S = draw_sketch(k1, "countsketch", s, m, dtype=A.dtype)
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    _, Rf = jnp.linalg.qr(S.apply(A).astype(dt))
+    # Solve Rᵀ Zᵀ = Aᵀ → Z = A R⁻¹ without forming R⁻¹
+    Z = jax.scipy.linalg.solve_triangular(Rf, A.astype(dt).T, lower=False, trans="T").T
+    jl = max(8, int(jnp.ceil(jnp.log2(m))) * 2)
+    G = jax.random.normal(k2, (n, jl), dt) / jnp.sqrt(jl)
+    return jnp.sum((Z @ G) ** 2, axis=1)

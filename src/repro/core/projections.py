@@ -1,0 +1,26 @@
+"""Convex-cone projections (paper §3.2, Proposition 1, Eqns. 3.5/3.6)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sym_project", "psd_project"]
+
+
+def sym_project(X: jax.Array) -> jax.Array:
+    """Π_{H^n}(X) = (X + Xᵀ)/2 (Eqn. 3.5)."""
+    return 0.5 * (X + X.T)
+
+
+def psd_project(X: jax.Array) -> jax.Array:
+    """Π_{H^n₊}(X): symmetrize, eigendecompose, clip negative spectrum (Eqn. 3.6).
+
+    Runs in fp32+ regardless of input dtype; the sketched core matrices this
+    is applied to are c×c (Remark 3: O(c³) — negligible).
+    """
+    dt = jnp.promote_types(X.dtype, jnp.float32)
+    Xs = sym_project(X.astype(dt))
+    w, V = jnp.linalg.eigh(Xs)
+    w = jnp.maximum(w, 0.0)
+    return ((V * w[None, :]) @ V.T).astype(X.dtype)

@@ -1,0 +1,233 @@
+"""Single-pass SVD (paper §5).
+
+* **Algorithm 3 (Fast SP-SVD, ours/paper)** — streaming API
+  (:func:`sp_svd_init` / :func:`sp_svd_update` / :func:`sp_svd_finalize`)
+  mirroring the paper's while-loop over L-column panels, plus a one-shot
+  convenience :func:`fast_sp_svd`.
+* **Algorithm 4 (Practical SP-SVD, Tropp et al. 2017)** — the baseline,
+  :func:`practical_sp_svd`.
+
+Sketch construction follows Algorithm 3 step 3: OSNAP (p = O(1) nonzeros
+per column) composed with Gaussian projections for Ψ̃/Ω̃, and plain OSNAP
+for the inner S_C/S_R. Space: C (m×c) + R (r×n) + M (s_c×s_r) — the
+O((m+n)k/ε) footprint of Theorem 4; the input panels are never retained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gmr import _solve_least_squares, fast_gmr_core
+from .sketching import CountSketch, GaussianSketch, OSNAPSketch, draw_sketch
+
+__all__ = [
+    "SPSVDSketches",
+    "SPSVDState",
+    "sp_svd_sizes",
+    "sp_svd_init",
+    "sp_svd_update",
+    "sp_svd_finalize",
+    "fast_sp_svd",
+    "practical_sp_svd",
+    "svd_error_ratio",
+]
+
+
+def sp_svd_sizes(k: int, eps: float, gamma: float = 0.25) -> dict:
+    """Algorithm 3 step 2 sketch sizes (constants chosen per §6.3's recipe)."""
+    ke = k / eps
+    c = r = int(np.ceil(3 * ke))
+    c0 = r0 = int(np.ceil(3 * ke ** (1.0 + gamma)))
+    s = int(np.ceil(3 * k / eps**1.5))
+    return dict(c=c, r=r, c0=c0, r0=r0, s_c=s, s_r=s)
+
+
+@dataclasses.dataclass(frozen=True)
+class SPSVDSketches:
+    """The six sketching operators of Algorithm 3 step 3."""
+
+    psi: OSNAPSketch  # (r0, m)
+    g_r: GaussianSketch  # (r, r0)
+    omega: OSNAPSketch  # (c0, n)
+    g_c: GaussianSketch  # (c, c0)
+    s_c: OSNAPSketch  # (s_c, m)
+    s_r: OSNAPSketch  # (s_r, n)
+
+
+jax.tree_util.register_dataclass(
+    SPSVDSketches, data_fields=["psi", "g_r", "omega", "g_c", "s_c", "s_r"], meta_fields=[]
+)
+
+
+@dataclasses.dataclass
+class SPSVDState:
+    """Streaming accumulators (Algorithm 3 step 4)."""
+
+    C: jax.Array  # (m, c): C += A_L · Ω̃[cols]
+    R: jax.Array  # (r, n): R[:, cols] = G_R Ψ A_L
+    M: jax.Array  # (s_c, s_r): M += S_C A_L S_R[:, cols]ᵀ
+    offset: jax.Array  # columns consumed so far
+    sketches: SPSVDSketches
+
+
+jax.tree_util.register_dataclass(
+    SPSVDState, data_fields=["C", "R", "M", "offset", "sketches"], meta_fields=[]
+)
+
+
+def sp_svd_init(
+    key,
+    m: int,
+    n: int,
+    *,
+    k: Optional[int] = None,
+    eps: float = 0.5,
+    sizes: Optional[dict] = None,
+    dtype=jnp.float32,
+    osnap_p: int = 2,
+) -> SPSVDState:
+    """Draw sketches and allocate zero accumulators (Algorithm 3 steps 2–4)."""
+    if sizes is None:
+        if k is None:
+            raise ValueError("pass either `k` (+eps) or explicit `sizes`")
+        sizes = sp_svd_sizes(k, eps)
+    c, r, c0, r0, s_c, s_r = (sizes[x] for x in ("c", "r", "c0", "r0", "s_c", "s_r"))
+    keys = jax.random.split(key, 6)
+    sk = SPSVDSketches(
+        psi=OSNAPSketch.draw(keys[0], r0, m, p=osnap_p, dtype=dtype),
+        g_r=GaussianSketch.draw(keys[1], r, r0, dtype=dtype),
+        omega=OSNAPSketch.draw(keys[2], c0, n, p=osnap_p, dtype=dtype),
+        g_c=GaussianSketch.draw(keys[3], c, c0, dtype=dtype),
+        s_c=OSNAPSketch.draw(keys[4], s_c, m, p=osnap_p, dtype=dtype),
+        s_r=OSNAPSketch.draw(keys[5], s_r, n, p=osnap_p, dtype=dtype),
+    )
+    return SPSVDState(
+        C=jnp.zeros((m, c), dtype),
+        R=jnp.zeros((r, n), dtype),
+        M=jnp.zeros((s_c, s_r), dtype),
+        offset=jnp.zeros((), jnp.int32),
+        sketches=sk,
+    )
+
+
+def sp_svd_update(state: SPSVDState, A_L: jax.Array) -> SPSVDState:
+    """Consume one L-column panel (Algorithm 3 steps 6–8). jit-compatible."""
+    sk = state.sketches
+    L = A_L.shape[1]
+    off = state.offset
+
+    # C += A_L · Ω̃[cols]  with  Ω̃[cols] = Ω[:, cols]ᵀ · G_Cᵀ  (never materialized)
+    omega_cols = sk.omega.cols(off, L)  # (c0, L) sub-sketch
+    a_omega = omega_cols.apply_t(A_L)  # A_L (m,L) × Ω[:,cols]ᵀ (L,c0) → (m, c0)
+    C = state.C + sk.g_c.apply_t(a_omega)  # (m, c)
+
+    # R[:, cols] = G_R · (Ψ A_L)
+    r_block = sk.g_r.apply(sk.psi.apply(A_L))  # (r, L)
+    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_block, off, axis=1)
+
+    # M += (S_C A_L) · S_R[:, cols]ᵀ
+    sc_a = sk.s_c.apply(A_L)  # (s_c, L)
+    M = state.M + sk.s_r.cols(off, L).apply_t(sc_a)  # (s_c, s_r)
+
+    return SPSVDState(C=C, R=R, M=M, offset=off + L, sketches=sk)
+
+
+def sp_svd_finalize(
+    state: SPSVDState, k: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Algorithm 3 steps 10–13: QR bases, sketched core solve, small SVD.
+
+    Returns (U, Σ, V) with ``A ≈ U diag(Σ) Vᵀ``; ranks are c/r (not k) unless
+    ``k`` is given, matching §6.3's "without fixed rank" protocol.
+    """
+    sk = state.sketches
+    dt = jnp.promote_types(state.C.dtype, jnp.float32)
+    U_C, _ = jnp.linalg.qr(state.C.astype(dt))  # (m, c)
+    V_R, _ = jnp.linalg.qr(state.R.T.astype(dt))  # (n, r)
+
+    ScU = sk.s_c.apply(U_C.astype(state.C.dtype)).astype(dt)  # (s_c, c)
+    SrV = sk.s_r.apply(V_R.astype(state.C.dtype)).astype(dt)  # (s_r, r)
+    # N = (S_C U_C)† M (V_Rᵀ S_Rᵀ)†  — Fast GMR core (Eqn. 5.3)
+    N = fast_gmr_core(ScU, state.M.astype(dt), SrV.T)
+
+    U_N, S, V_Nt = jnp.linalg.svd(N, full_matrices=False)
+    U = U_C @ U_N
+    V = V_R @ V_Nt.T
+    if k is not None:
+        U, S, V = U[:, :k], S[:k], V[:, :k]
+    return U, S, V
+
+
+def fast_sp_svd(
+    key,
+    A: jax.Array,
+    *,
+    k: Optional[int] = None,
+    eps: float = 0.5,
+    sizes: Optional[dict] = None,
+    panel: int = 512,
+    fixed_rank: Optional[int] = None,
+):
+    """One-shot Algorithm 3: stream ``A`` through the panel loop internally."""
+    m, n = A.shape
+    state = sp_svd_init(key, m, n, k=k, eps=eps, sizes=sizes, dtype=A.dtype)
+    step = jax.jit(sp_svd_update)
+    for off in range(0, n, panel):
+        width = min(panel, n - off)
+        if width != panel:  # last ragged panel: use an unjitted call
+            state = sp_svd_update(state, A[:, off : off + width])
+        else:
+            state = step(state, jax.lax.dynamic_slice_in_dim(A, off, panel, axis=1))
+    return sp_svd_finalize(state, k=fixed_rank)
+
+
+def practical_sp_svd(
+    key,
+    A: jax.Array,
+    *,
+    c: int,
+    r: int,
+    sketch: str = "gaussian",
+    fixed_rank: Optional[int] = None,
+):
+    """Algorithm 4 (Tropp et al. 2017) — the baseline Practical SP-SVD.
+
+    C = A Ω̃, R = Ψ̃ A, N' = (Ψ̃ U_C)† (R V_R); same single-pass structure but
+    the core is *not* a GMR solution (§5.3's comparison point).
+    """
+    m, n = A.shape
+    k_psi, k_om = jax.random.split(key)
+    psi = draw_sketch(k_psi, sketch, r, m, dtype=A.dtype)  # Ψ̃ (r, m)
+    omega = draw_sketch(k_om, sketch, c, n, dtype=A.dtype)  # Ω̃ᵀ (c, n)
+
+    C = omega.apply_t(A)  # A Ω̃ (m, c)
+    R = psi.apply(A)  # Ψ̃ A (r, n)
+
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    U_C, _ = jnp.linalg.qr(C.astype(dt))
+    V_R, _ = jnp.linalg.qr(R.T.astype(dt))
+
+    PsiU = psi.apply(U_C.astype(A.dtype)).astype(dt)  # (r, c)
+    N = _solve_least_squares(PsiU, (R.astype(dt) @ V_R))  # (c, r)
+
+    U_N, S, V_Nt = jnp.linalg.svd(N, full_matrices=False)
+    U = U_C @ U_N
+    V = V_R @ V_Nt.T
+    if fixed_rank is not None:
+        U, S, V = U[:, :fixed_rank], S[:fixed_rank], V[:, :fixed_rank]
+    return U, S, V
+
+
+def svd_error_ratio(A: jax.Array, U, S, V, k: int) -> jax.Array:
+    """§6.3 metric: ||A − UΣVᵀ||_F / ||A − A_k||_F − 1 (can be negative)."""
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    approx = (U * S[None, :]) @ V.T
+    num = jnp.linalg.norm(A.astype(dt) - approx.astype(dt))
+    sv = jnp.linalg.svd(A.astype(dt), compute_uv=False)
+    den = jnp.sqrt(jnp.sum(sv[k:] ** 2))
+    return num / jnp.maximum(den, jnp.finfo(dt).tiny) - 1.0

@@ -1,0 +1,2 @@
+"""Deterministic restartable data pipeline."""
+from .synthetic import DataConfig, SyntheticLM

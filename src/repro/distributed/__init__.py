@@ -1,0 +1,2 @@
+"""Mesh/sharding rules and collective helpers."""
+from .sharding import ParallelismRules, param_shardings, param_pspecs, cache_shardings, batch_pspec, leaf_pspec, explain, activation_sharding, shard_act

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+twoside_sketch — fused S_C·A·S_Rᵀ (Algorithm 1/3 inner sketch)
+countsketch    — TPU-adapted input-sparsity CountSketch (one-hot MXU matmul)
+Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd wrappers.
+"""
+from .ops import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref

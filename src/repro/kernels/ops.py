@@ -1,0 +1,93 @@
+"""jit'd public wrappers: shape padding, dtype policy, interpret fallback.
+
+On this CPU container ``interpret=True`` executes the kernel bodies in
+Python for correctness; on TPU the same code lowers to Mosaic. The
+wrappers pad every dim to its block multiple with zeros (mathematically a
+no-op for both kernels: zero rows/cols contribute nothing) and slice the
+result back.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .countsketch import countsketch_kernel
+from .ref import countsketch_ref, twoside_sketch_ref
+from .twoside_sketch import twoside_sketch_kernel
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, mults) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p for _, p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+@partial(jax.jit, static_argnames=("block_sc", "block_sr", "block_m", "block_n", "interpret"))
+def twoside_sketch(
+    sc: jax.Array,
+    a: jax.Array,
+    srt: jax.Array,
+    *,
+    block_sc: int = 128,
+    block_sr: int = 128,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """M = S_C · A · S_Rᵀ (fused, fp32 out). Shapes: (s_c,m)·(m,n)·(n,s_r)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    s_c, m = sc.shape
+    n, s_r = srt.shape
+    scp = _pad_to(sc, (block_sc, block_m))
+    ap = _pad_to(a, (block_m, block_n))
+    srtp = _pad_to(srt, (block_n, block_sr))
+    out = twoside_sketch_kernel(
+        scp, ap, srtp,
+        block_sc=block_sc, block_sr=block_sr, block_m=block_m, block_n=block_n,
+        interpret=interpret,
+    )
+    return out[:s_c, :s_r]
+
+
+@partial(jax.jit, static_argnames=("s", "block_m", "block_n", "interpret"))
+def countsketch_apply(
+    hashes: jax.Array,
+    signs: jax.Array,
+    a: jax.Array,
+    s: int,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """S·A for a CountSketch given (hash, sign) vectors. Returns (s, n) fp32."""
+    interpret = _on_cpu() if interpret is None else interpret
+    m, n = a.shape
+    s_pad = s + ((-s) % 128)
+    ap = _pad_to(a, (block_m, block_n))
+    # padded rows must not pollute bucket 0: send them to the padding bucket
+    hp = _pad_to(hashes, (block_m,))
+    if hp.shape[0] != m:
+        filler = jnp.full((hp.shape[0] - m,), s_pad - 1 if s_pad > s else s - 1, hp.dtype)
+        hp = hp.at[m:].set(filler)
+    sgp = _pad_to(signs, (block_m,))  # zero signs ⇒ padded rows contribute 0
+    out = countsketch_kernel(
+        hp, sgp, ap, s_pad, block_m=block_m, block_n=block_n, interpret=interpret
+    )
+    return out[:s, : n]
+
+
+__all__ = [
+    "twoside_sketch",
+    "countsketch_apply",
+    "twoside_sketch_ref",
+    "countsketch_ref",
+]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def twoside_sketch_ref(sc: jax.Array, a: jax.Array, srt: jax.Array) -> jax.Array:
+    """M = S_C · A · S_Rᵀ in fp32."""
+    dt = jnp.float32
+    return (sc.astype(dt) @ a.astype(dt)) @ srt.astype(dt)
+
+
+def countsketch_ref(hashes: jax.Array, signs: jax.Array, a: jax.Array, s: int) -> jax.Array:
+    """Signed segment-sum (the CPU input-sparsity algorithm)."""
+    signed = a.astype(jnp.float32) * signs.astype(jnp.float32)[:, None]
+    return jax.ops.segment_sum(signed, hashes, num_segments=s)

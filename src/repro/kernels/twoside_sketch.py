@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused two-sided sketch  M = S_C · A · S_Rᵀ.
+
+The hot spot of Algorithm 1 / Algorithm 3 step 8 (``M += S_C A_L S_R``) and
+of gradient compression. Computing ``(S_C A)`` first writes an s_c×n
+intermediate through HBM and reads it back; the fused kernel keeps the
+``(bsc × bsr)`` output accumulator in VMEM scratch across the whole
+(m, n) reduction, so each A tile is read exactly once:
+
+    HBM traffic:  m·n  +  (m/bm)·s_c·bm  +  (n/bn)·s_r·bn  + s_c·s_r
+    vs sequential: m·n + 2·s_c·n + …
+
+Grid (i, j, k, l) = (s_c blocks, s_r blocks, m blocks, n blocks), reduction
+over (k, l); two MXU matmuls per step:  (bsc×bm)(bm×bn) → (bsc×bn), then
+(bsc×bn)(bn×bsr). All tile dims are 128-multiples (MXU-aligned); fp32
+accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sc_ref, a_ref, srt_ref, out_ref, acc_ref):
+    k, l = pl.program_id(2), pl.program_id(3)
+
+    @pl.when((k == 0) & (l == 0))
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (bsc, bm) @ (bm, bn) @ (bn, bsr), fp32 accumulate on the MXU
+    t = jnp.dot(sc_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(
+        t.astype(srt_ref.dtype), srt_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when((k == pl.num_programs(2) - 1) & (l == pl.num_programs(3) - 1))
+    def _():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def twoside_sketch_kernel(
+    sc: jax.Array,  # (s_c, m)
+    a: jax.Array,  # (m, n)
+    srt: jax.Array,  # (n, s_r)
+    *,
+    block_sc: int = 128,
+    block_sr: int = 128,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """All dims must already be padded to their block multiples (see ops.py)."""
+    s_c, m = sc.shape
+    n, s_r = srt.shape
+    assert a.shape == (m, n)
+    assert s_c % block_sc == 0 and s_r % block_sr == 0
+    assert m % block_m == 0 and n % block_n == 0
+
+    grid = (s_c // block_sc, s_r // block_sr, m // block_m, n // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_sc, block_m), lambda i, j, k, l: (i, k)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, k, l: (k, l)),
+            pl.BlockSpec((block_n, block_sr), lambda i, j, k, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((block_sc, block_sr), lambda i, j, k, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s_c, s_r), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_sc, block_sr), jnp.float32)],
+        interpret=interpret,
+    )(sc, a, srt)

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this emits
+  * ``compiled.memory_analysis()``   — per-device bytes (proves it fits),
+  * ``compiled.cost_analysis()``     — per-device FLOPs / bytes accessed,
+  * a collective census parsed from ``compiled.as_text()`` (op kind,
+    result bytes, group size, algorithm-adjusted wire bytes),
+into ``benchmarks/artifacts/dryrun/<arch>__<shape>__<mesh>.json``; the
+roofline analysis (benchmarks/roofline.py, EXPERIMENTS.md §Roofline) reads
+these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.distributed.sharding import (
+    ParallelismRules,
+    activation_sharding,
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+)
+from repro.launch.hlo_census import census as hlo_census
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.config import ModelConfig
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun")
+
+# archs whose TP-only weight shards exceed one v5e's HBM → FSDP over data
+FSDP_ARCHS = {"kimi-k2-1t-a32b", "llama-3.2-vision-90b"}
+
+
+def rules_for(arch_id: str, mesh, knobs: dict | None = None) -> ParallelismRules:
+    rules = ParallelismRules(fsdp=arch_id in FSDP_ARCHS).with_mesh(mesh)
+    knobs = knobs or {}
+    if knobs.get("_no_fsdp"):
+        rules = dataclasses.replace(rules, fsdp=False)
+    if knobs.get("_seq_parallel"):
+        rules = dataclasses.replace(rules, seq_parallel=True, tp_enabled=False)
+    return rules
+
+
+def _attach(structs, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), structs, shardings
+    )
+
+
+def input_specs(arch_id: str, shape_name: str, mesh, *, overrides: dict | None = None):
+    """Abstract (ShapeDtypeStruct + sharding) inputs for one cell.
+
+    Returns (step_fn, args tuple, in_shardings-attached args, donate_argnums,
+    out_shardings hint or None).
+    """
+    mod = get_arch(arch_id)
+    cfg = mod.full_config()
+    # underscore-prefixed overrides are step-level knobs, not config fields
+    overrides = dict(overrides or {})
+    knobs = {k: overrides.pop(k) for k in list(overrides) if k.startswith("_")}
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape_name]
+    rules = rules_for(arch_id, mesh, knobs)
+    key = jax.random.key(0)
+
+    pshape = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    pshard = param_shardings(pshape, rules, mesh)
+    bspec = NamedSharding(mesh, batch_pspec(rules))
+
+    def tok_struct(batch, seq):
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32, sharding=bspec)
+
+    vision_struct = None
+    if cfg.d_vision:
+        vision_struct = jax.ShapeDtypeStruct(
+            (cell.global_batch, cfg.n_patches, cfg.d_vision),
+            cfg.param_dtype,
+            sharding=NamedSharding(mesh, P(rules.dp_axes, None, None)),
+        )
+
+    if cell.kind == "train":
+        oc = OptimizerConfig(moments_dtype=knobs.get("_moments_dtype", "float32"))
+        oshape = jax.eval_shape(lambda p: init_opt_state(p, oc), pshape)
+        # moments follow the param shardings; step scalar replicated
+        oshard = {
+            "m": jax.tree.map(lambda sh: sh, pshard),
+            "v": jax.tree.map(lambda sh: sh, pshard),
+            "step": NamedSharding(mesh, P()),
+        }
+        state = {
+            "params": _attach(pshape, pshard),
+            "opt": _attach(oshape, oshard),
+        }
+        batch = {"tokens": tok_struct(cell.global_batch, cell.seq_len)}
+        if vision_struct is not None:
+            batch["vision"] = vision_struct
+        remat = knobs.get("_remat", "full")
+        micro = knobs.get("_microbatch", 1)
+
+        if knobs.get("_compress_rank"):
+            from repro.train import CompressionConfig, make_compressed_train_step
+            from repro.train.grad_compress import init_error_state
+
+            ccfg = CompressionConfig(
+                rank=int(knobs["_compress_rank"]),
+                sketch_factor=int(knobs.get("_compress_factor", 4)),
+                min_dim=int(knobs.get("_compress_min_dim", 1024)),
+            )
+            cstep, _ = make_compressed_train_step(cfg, oc, ccfg, mesh, rules, remat=remat)
+            nw = int(np.prod([mesh.shape[a] for a in rules.dp_axes]))
+            eshape = jax.eval_shape(lambda p: init_error_state(p, ccfg, nw), pshape)
+            eshard = jax.tree.map(
+                lambda s: NamedSharding(mesh, P(rules.dp_axes, *([None] * (s.ndim - 1)))),
+                eshape,
+            )
+            state["err"] = _attach(eshape, eshard)
+            key_in = jax.random.key(7)
+
+            def step(state, batch):
+                return cstep(state, batch, key_in)
+
+            return step, (state, batch), ()
+
+        step = make_train_step(cfg, oc, remat=remat, microbatch=micro)
+        return step, (state, batch), (0,)
+
+    if cell.kind == "prefill":
+        params = _attach(pshape, pshard)
+        tokens = tok_struct(cell.global_batch, cell.seq_len)
+
+        def step(params, tokens, vision=None):
+            return prefill(params, cfg, tokens, cell.seq_len, vision=vision)
+
+        if vision_struct is not None:
+            return step, (params, tokens, vision_struct), ()
+        return step, (params, tokens), ()
+
+    # decode: serve_step = one token against a seq_len cache
+    params = _attach(pshape, pshard)
+    cshape = jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len)
+    )
+    seq_shard = shape_name == "long_500k"
+    cshard = cache_shardings(cshape, rules, mesh, seq_shard=seq_shard)
+    cache = _attach(cshape, cshard)
+    token = jax.ShapeDtypeStruct(
+        (cell.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, batch_pspec(rules) if not seq_shard else P(None, None)),
+    )
+
+    def step(params, cache, token):
+        return decode_step(params, cfg, cache, token)
+
+    return step, (params, cache, token), (1,)
+
+
+def active_param_count(cfg: ModelConfig, pshape) -> int:
+    """Parameters touched per token: total minus the inactive expert share."""
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    if not cfg.n_experts:
+        return total
+    expert = 3 * cfg.d_model * cfg.d_ff_expert  # gate+up+down per expert
+    n_moe_layers = sum(1 for b in cfg.pattern if b.ffn == "moe")
+    inactive = n_moe_layers * (cfg.n_experts - cfg.moe_top_k) * expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Collective census (naive single-count version; the loop-aware census in
+# hlo_census.py supersedes this — kept for cross-checking in tests)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "u32": 4, "s32": 4, "u64": 8,
+                "s64": 8, "u16": 2, "s16": 2, "u8": 1, "s8": 1, "pred": 1, "c64": 8, "f8": 1}
+_COLL_RE = re.compile(
+    r"= \(?([a-z0-9]+)\[([0-9,]*)\][^)]*?\)? (all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _wire_factor(op: str, g: int) -> float:
+    """Ring-algorithm wire bytes per device, as a multiple of the RESULT bytes."""
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-gather":
+        return (g - 1) / g  # result is the gathered (full) tensor
+    if op == "reduce-scatter":
+        return float(g - 1)  # result is the scattered piece; input = g × result
+    if op == "all-to-all":
+        return (g - 1) / g
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_census(hlo_text: str) -> dict:
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_EXPL_RE.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        result_bytes = numel * nbytes
+        stats[op]["count"] += 1
+        stats[op]["result_bytes"] += result_bytes
+        stats[op]["wire_bytes"] += result_bytes * _wire_factor(op, max(g, 1))
+    return {k: dict(v) for k, v in stats.items()}
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             overrides: dict | None = None, tag: str = "", verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    knobs = {k: v for k, v in (overrides or {}).items() if k.startswith("_")}
+    step, args, donate = input_specs(arch_id, shape_name, mesh, overrides=overrides)
+
+    rules = rules_for(arch_id, mesh, knobs)
+    with mesh, activation_sharding(mesh, rules):
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    cen = hlo_census(txt)  # loop-aware: flops / hbm bytes / collectives
+
+    mod = get_arch(arch_id)
+    cfg = mod.full_config()
+    pshape = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    n_active = active_param_count(cfg, pshape)
+
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "n_params": n_params,
+        "n_active_params": n_active,
+        # loop-aware census (per device)
+        "flops_per_device": cen["flops"],
+        "hbm_bytes_per_device": cen["hbm_bytes"],
+        "collectives": cen["collectives"],
+        "while_trip_counts": cen["while_trip_counts"][:40],
+        # raw cost_analysis (counts while bodies ONCE — recorded for reference)
+        "xla_cost_analysis": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{arch_id.replace('/', '_')}__{shape_name}__{mesh_name}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        mem_gb = record["memory"]["peak_estimate_bytes"] / 1e9
+        wire = sum(v["wire_bytes"] for v in cen["collectives"].values())
+        print(
+            f"[dryrun] {arch_id:22s} {shape_name:12s} {mesh_name:8s} "
+            f"compile={t_compile:6.1f}s flops/dev={record['flops_per_device']:.3e} "
+            f"mem/dev={mem_gb:7.2f}GB wire/dev={wire/1e9:8.3f}GB "
+            f"colls={{{', '.join(f'{k}:{int(v['count'])}' for k, v in cen['collectives'].items())}}}"
+        )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch_id, mod in ARCHS.items():
+            for shape in mod.SUPPORTED_SHAPES:
+                cells.append((arch_id, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch_id, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            fname = os.path.join(args.out, f"{arch_id}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"[dryrun] skip existing {arch_id} {shape} {mesh_name}")
+                continue
+            try:
+                run_cell(arch_id, shape, multi_pod=mp, out_dir=args.out)
+            except Exception as e:  # noqa: BLE001 — report all cell failures at the end
+                failures.append((arch_id, shape, mesh_name, repr(e)))
+                print(f"[dryrun] FAIL {arch_id} {shape} {mesh_name}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

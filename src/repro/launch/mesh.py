@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2×16×16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 4, model: int = 2):
+    """CI-scale mesh for tests/examples on the local host devices."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,62 @@
+"""Batched serving driver: prefill + decode loop with timing.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --batch 4 --prompt-len 64 --gen 32 --mesh 4x2
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.distributed.sharding import ParallelismRules, activation_sharding, param_shardings
+from repro.models import init_params, param_count
+from repro.models.modality import synth_patch_embeddings
+from repro.serve import generate
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default="4x2")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = jax.make_mesh((d, m), ("data", "model"))
+    rules = ParallelismRules(dp_axes=("data",))
+    mod = get_arch(args.arch)
+    cfg = mod.smoke_config() if args.smoke else mod.full_config()
+
+    params = init_params(jax.random.key(args.seed), cfg)
+    params = jax.device_put(params, param_shardings(params, rules, mesh))
+    print(f"[serve] {cfg.name}: {param_count(params)/1e6:.2f}M params")
+
+    key = jax.random.key(args.seed + 1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+    vision = synth_patch_embeddings(key, cfg, args.batch) if cfg.d_vision else None
+
+    with mesh, activation_sharding(mesh, rules):
+        t0 = time.time()
+        out = generate(params, cfg, prompt, args.gen, key=key,
+                       temperature=args.temperature, vision=vision, dense_moe=True)
+        out.block_until_ready()
+    dt = time.time() - t0
+    n_tok = args.batch * args.gen
+    print(f"[serve] generated {out.shape} in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+    print("[serve] sample:", out[0, :16].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""LM substrate: composable decoder blocks for the 10 assigned architectures."""
+
+from .config import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS,
+    DENSE,
+    MAMBA2,
+    MLA,
+    MOE,
+    NONE,
+    SHARED_ATTN,
+    BlockSpec,
+    ModelConfig,
+    Segment,
+    compile_pattern,
+)
+from .transformer import (
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+    segments,
+    train_logits,
+)
+
+__all__ = [
+    "ATTN", "ATTN_LOCAL", "CROSS", "DENSE", "MAMBA2", "MLA", "MOE", "NONE", "SHARED_ATTN",
+    "BlockSpec", "ModelConfig", "Segment", "compile_pattern",
+    "decode_step", "forward_hidden", "init_cache", "init_params", "param_count",
+    "prefill", "segments", "train_logits",
+]

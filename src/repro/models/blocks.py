@@ -1,0 +1,296 @@
+"""Residual blocks: pre-norm mixer (+ pre-norm FFN) with per-kind caches.
+
+Every block kind exposes:
+  init_block(key, spec, cfg)                      → params
+  block_train(params, spec, cfg, x, extras)       → (x, aux_loss)
+  block_prefill(params, spec, cfg, x, cache_len, extras) → (x, aux, cache)
+  block_decode(params, spec, cfg, x, cache, length, extras) → (x, cache)
+  init_block_cache(spec, cfg, batch, cache_len)   → cache pytree
+
+Cache layouts (the serving memory story):
+  attn        : K/V (B, cache_len, KV, hd)         — full history
+  attn_local  : K/V (B, window, KV, hd)            — ring buffer
+  mla         : latent (B, cache_len, r+rope)      — MLA's compressed cache
+  mamba2      : conv (B, K-1, C) + state (B,H,N,P) — O(1) in sequence length
+  cross       : K/V (B, n_patches, KV, hd)         — static after prefill
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .attention import attention_train, decode_attention, flash_attention
+from .config import (
+    ATTN,
+    ATTN_LOCAL,
+    CROSS,
+    DENSE,
+    MAMBA2,
+    MLA,
+    MOE,
+    NONE,
+    SHARED_ATTN,
+    BlockSpec,
+    ModelConfig,
+)
+from .layers import apply_rope, ffn, init_ffn, init_rmsnorm, rmsnorm, truncated_normal_init
+
+
+# ---------------------------------------------------------------------------
+# GQA attention mixer
+# ---------------------------------------------------------------------------
+
+
+def _init_gqa(key, cfg: ModelConfig) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(D)
+    return {
+        "w_q": truncated_normal_init(ks[0], (D, H * hd), cfg.param_dtype, s),
+        "w_k": truncated_normal_init(ks[1], (D, KV * hd), cfg.param_dtype, s),
+        "w_v": truncated_normal_init(ks[2], (D, KV * hd), cfg.param_dtype, s),
+        "w_o": truncated_normal_init(ks[3], (H * hd, D), cfg.param_dtype, 1.0 / np.sqrt(H * hd)),
+    }
+
+
+def _theta_for(spec_mixer: str, cfg: ModelConfig) -> float:
+    if spec_mixer in (ATTN, SHARED_ATTN) and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _gqa_qkv(params, x, positions, cfg: ModelConfig, theta: float):
+    from repro.distributed.sharding import shard_act
+
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = shard_act((x @ params["w_q"]).reshape(B, S, H, hd), "bthd")
+    k = shard_act((x @ params["w_k"]).reshape(B, S, KV, hd), "bthd")
+    v = shard_act((x @ params["w_v"]).reshape(B, S, KV, hd), "bthd")
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _gqa_train(params, spec_mixer, cfg, x):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _gqa_qkv(params, x, positions, cfg, _theta_for(spec_mixer, cfg))
+    window = cfg.window if spec_mixer == ATTN_LOCAL else None
+    o = attention_train(q, k, v, window=window, chunk=cfg.attn_chunk, impl=cfg.attn_impl)
+    return o.reshape(B, S, -1) @ params["w_o"]
+
+
+def _gqa_prefill(params, spec_mixer, cfg, x, cache_len):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = _gqa_qkv(params, x, positions, cfg, _theta_for(spec_mixer, cfg))
+    window = cfg.window if spec_mixer == ATTN_LOCAL else None
+    o = flash_attention(q, k, v, window=window, chunk=cfg.attn_chunk)
+
+    if spec_mixer == ATTN_LOCAL:
+        w = cfg.window
+        keep = min(S, w)
+        tail_k, tail_v = k[:, S - keep :], v[:, S - keep :]
+        slots = (np.arange(S - keep, S)) % w
+        ck = jnp.zeros((B, w, cfg.n_kv_heads, cfg.head_dim), k.dtype).at[:, slots].set(tail_k)
+        cv = jnp.zeros((B, w, cfg.n_kv_heads, cfg.head_dim), v.dtype).at[:, slots].set(tail_v)
+        cache = {"k": ck, "v": cv}
+    else:
+        pad = cache_len - S
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    return o.reshape(B, S, -1) @ params["w_o"], cache
+
+
+def _gqa_decode(params, spec_mixer, cfg, x, cache, length):
+    B = x.shape[0]
+    positions = jnp.broadcast_to(length[None, None], (B, 1))
+    q, k, v = _gqa_qkv(params, x, positions, cfg, _theta_for(spec_mixer, cfg))
+    if spec_mixer == ATTN_LOCAL:
+        w = cfg.window
+        slot = length % w
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        # ring: every slot with index < min(length+1, w) tokens is valid; all
+        # contents are within-window by construction → plain length mask on slots.
+        o = decode_attention(q, ck, cv, jnp.minimum(length + 1, w))
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), length, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), length, axis=1)
+        o = decode_attention(q, ck, cv, length + 1)
+    return o.reshape(B, 1, -1) @ params["w_o"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention mixer (VLM)
+# ---------------------------------------------------------------------------
+
+
+def _init_cross(key, cfg: ModelConfig) -> dict:
+    p = _init_gqa(key, cfg)
+    p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated residual (llama-vision style)
+    return p
+
+
+def _cross_kv(params, vis, cfg: ModelConfig):
+    B, P, _ = vis.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (vis @ params["w_k"]).reshape(B, P, KV, hd)
+    v = (vis @ params["w_v"]).reshape(B, P, KV, hd)
+    return k, v
+
+
+def _cross_attend(params, cfg, x, k, v):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    KV = cfg.n_kv_heads
+    q = (x @ params["w_q"]).reshape(B, S, H, hd)
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    s = jnp.einsum("bqkgd,bpkd->bkgqp", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqp,bpkd->bqkgd", p.astype(v.dtype), v).reshape(B, S, H * hd)
+    return (jnp.tanh(params["gate"]) * (o @ params["w_o"])).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level dispatch
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, spec: BlockSpec, cfg: ModelConfig) -> dict:
+    k_mix, k_ffn, k_n1, k_n2 = jax.random.split(key, 4)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if spec.mixer in (ATTN, ATTN_LOCAL):
+        p["mixer"] = _init_gqa(k_mix, cfg)
+    elif spec.mixer == SHARED_ATTN:
+        p["mixer"] = {}  # weights live in the model-level shared collection
+    elif spec.mixer == MLA:
+        p["mixer"] = mla_mod.init_mla(k_mix, cfg)
+    elif spec.mixer == MAMBA2:
+        p["mixer"] = ssm_mod.init_mamba2(k_mix, cfg)
+    elif spec.mixer == CROSS:
+        p["mixer"] = _init_cross(k_mix, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != NONE:
+        p["norm2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        if spec.ffn == DENSE:
+            p["ffn"] = init_ffn(k_ffn, cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.activation)
+        elif spec.ffn == MOE:
+            p["ffn"] = moe_mod.init_moe(k_ffn, cfg)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def _apply_ffn(params, spec: BlockSpec, cfg: ModelConfig, x, dense_moe: bool):
+    if spec.ffn == NONE:
+        return x, jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if spec.ffn == DENSE:
+        return x + ffn(params["ffn"], h, cfg.activation), jnp.zeros((), jnp.float32)
+    fn = moe_mod.moe_ffn_dense if dense_moe else moe_mod.moe_ffn
+    out, aux = fn(params["ffn"], h, cfg)
+    return x + out, aux
+
+
+def block_train(params, spec: BlockSpec, cfg: ModelConfig, x, extras, *, dense_moe=False):
+    from repro.distributed.sharding import shard_act
+
+    x = shard_act(x, "btd")
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mixer = spec.mixer
+    if mixer in (ATTN, ATTN_LOCAL, SHARED_ATTN):
+        mp = extras["shared"] if mixer == SHARED_ATTN else params["mixer"]
+        x = x + _gqa_train(mp, mixer, cfg, h)
+    elif mixer == MLA:
+        x = x + mla_mod.mla_train(params["mixer"], h, cfg)
+    elif mixer == MAMBA2:
+        y, _ = ssm_mod.mamba2_forward(params["mixer"], h, cfg)
+        x = x + y
+    elif mixer == CROSS:
+        k, v = _cross_kv(params["mixer"], extras["vision"], cfg)
+        x = x + _cross_attend(params["mixer"], cfg, h, k, v)
+    return _apply_ffn(params, spec, cfg, x, dense_moe)
+
+
+def block_prefill(params, spec: BlockSpec, cfg: ModelConfig, x, cache_len: int, extras, *, dense_moe=False):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mixer = spec.mixer
+    if mixer in (ATTN, ATTN_LOCAL, SHARED_ATTN):
+        mp = extras["shared"] if mixer == SHARED_ATTN else params["mixer"]
+        y, cache = _gqa_prefill(mp, mixer, cfg, h, cache_len)
+        x = x + y
+    elif mixer == MLA:
+        y, latent = mla_mod.mla_prefill(params["mixer"], h, cfg, cache_len)
+        cache = {"latent": latent}
+        x = x + y
+    elif mixer == MAMBA2:
+        y, (conv_x, conv_bc, state) = ssm_mod.mamba2_forward(params["mixer"], h, cfg)
+        cache = {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": state}
+        x = x + y
+    elif mixer == CROSS:
+        k, v = _cross_kv(params["mixer"], extras["vision"], cfg)
+        cache = {"k": k, "v": v}
+        x = x + _cross_attend(params["mixer"], cfg, h, k, v)
+    x, aux = _apply_ffn(params, spec, cfg, x, dense_moe)
+    return x, aux, cache
+
+
+def block_decode(params, spec: BlockSpec, cfg: ModelConfig, x, cache, length, extras, *, dense_moe=False):
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    mixer = spec.mixer
+    if mixer in (ATTN, ATTN_LOCAL, SHARED_ATTN):
+        mp = extras["shared"] if mixer == SHARED_ATTN else params["mixer"]
+        y, cache = _gqa_decode(mp, mixer, cfg, h, cache, length)
+        x = x + y
+    elif mixer == MLA:
+        y, latent = mla_mod.mla_decode(params["mixer"], h, cfg, cache["latent"], length)
+        cache = {"latent": latent}
+        x = x + y
+    elif mixer == MAMBA2:
+        y, (conv_x, conv_bc, state) = ssm_mod.mamba2_decode(
+            params["mixer"], h, cfg, cache["conv_x"], cache["conv_bc"], cache["ssm"]
+        )
+        cache = {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": state}
+        x = x + y
+    elif mixer == CROSS:
+        x = x + _cross_attend(params["mixer"], cfg, h, cache["k"], cache["v"])
+    x, _ = _apply_ffn(params, spec, cfg, x, dense_moe)
+    return x, cache
+
+
+def init_block_cache(spec: BlockSpec, cfg: ModelConfig, batch: int, cache_len: int):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    mixer = spec.mixer
+    if mixer == ATTN_LOCAL:
+        w = cfg.window
+        return {"k": jnp.zeros((batch, w, KV, hd), dt), "v": jnp.zeros((batch, w, KV, hd), dt)}
+    if mixer in (ATTN, SHARED_ATTN):
+        return {
+            "k": jnp.zeros((batch, cache_len, KV, hd), dt),
+            "v": jnp.zeros((batch, cache_len, KV, hd), dt),
+        }
+    if mixer == MLA:
+        return {"latent": jnp.zeros((batch, cache_len, cfg.kv_lora_rank + cfg.rope_head_dim), dt)}
+    if mixer == MAMBA2:
+        conv_x, conv_bc, state = ssm_mod.init_mamba2_state(cfg, batch)
+        return {"conv_x": conv_x, "conv_bc": conv_bc, "ssm": state}
+    if mixer == CROSS:
+        return {
+            "k": jnp.zeros((batch, cfg.n_patches, KV, hd), dt),
+            "v": jnp.zeros((batch, cfg.n_patches, KV, hd), dt),
+        }
+    raise ValueError(mixer)

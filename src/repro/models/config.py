@@ -1,0 +1,170 @@
+"""Unified model configuration for the 10 assigned architectures.
+
+A model is a *pattern* of residual blocks. Each block has a mixer
+(attention variant / Mamba-2 SSD / cross-attention) and an optional FFN
+(dense SwiGLU/GELU or MoE). The pattern is compiled into repeated
+*segments* so that ``jax.lax.scan`` over stacked per-repeat parameters
+keeps HLO size O(#distinct block kinds) regardless of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# Mixer kinds
+ATTN = "attn"            # GQA + RoPE, full causal
+ATTN_LOCAL = "attn_local"  # GQA + RoPE, sliding window
+MLA = "mla"              # DeepSeek-V2 multi-head latent attention
+MAMBA2 = "mamba2"        # Mamba-2 SSD
+CROSS = "cross"          # cross-attention over modality embeddings
+SHARED_ATTN = "shared_attn"  # Zamba2-style block with weights shared across occurrences
+
+# FFN kinds
+DENSE = "dense"
+MOE = "moe"
+NONE = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One residual layer: (mixer, ffn)."""
+
+    mixer: str
+    ffn: str = DENSE
+
+    @property
+    def signature(self) -> Tuple[str, str]:
+        return (self.mixer, self.ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[BlockSpec, ...]
+
+    head_dim: int = 128
+    # Attention
+    rope_theta: float = 1e4
+    rope_theta_global: Optional[float] = None  # per-layer override for global layers
+    window: Optional[int] = None  # sliding window for ATTN_LOCAL
+    attn_chunk: int = 512  # online-softmax block size
+    # MLA (DeepSeek-V2)
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # Mamba-2 SSD
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # >1: dispatch per token-shard group (set = DP size) so the capacity
+    # buffer scatter is local to each data rank — without it the partitioner
+    # replicates expert compute across the data axis (§Perf B5)
+    moe_dispatch_shards: int = 1
+    # Modality (vlm/audio stubs)
+    d_vision: int = 0
+    n_patches: int = 0
+    # Numerics
+    dtype: str = "bfloat16"
+    activation: str = "silu"  # silu (SwiGLU) | gelu
+    # Attention autodiff implementation:
+    #   scan_ad     — differentiate through the online-softmax scan (baseline;
+    #                 saves stacked per-pair residuals → memory-heavy backward)
+    #   custom_vjp  — flash backward: save only (q,k,v,out,lse), recompute p
+    #                 per block pair (§Perf iteration A1; default after validation
+    #                 — the paper-faithful baseline artifacts used scan_ad)
+    attn_impl: str = "custom_vjp"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    logit_softcap: Optional[float] = None
+
+    # ---- derived ----
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def __post_init__(self):
+        assert len(self.pattern) == self.n_layers, (
+            f"{self.name}: pattern has {len(self.pattern)} blocks, n_layers={self.n_layers}"
+        )
+
+    def validate_tpu_alignment(self):
+        """Warn-level checks that TP-sharded dims are 128-multiples (MXU lanes)."""
+        issues = []
+        if self.n_heads and (self.n_heads * self.head_dim) % 128:
+            issues.append(f"attn width {self.n_heads * self.head_dim} not 128-aligned")
+        if self.d_ff % 128:
+            issues.append(f"d_ff {self.d_ff} not 128-aligned")
+        return issues
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A run of layers expressed as (unit pattern) × n_repeat for scan."""
+
+    unit: Tuple[BlockSpec, ...]
+    n_repeat: int
+
+
+def compile_pattern(pattern: Sequence[BlockSpec], max_unit: int = 8) -> Tuple[Segment, ...]:
+    """Factor a layer pattern into scan-friendly segments.
+
+    Finds the smallest unit length u ≤ max_unit such that a maximal suffix
+    of the pattern is a whole number of u-sized repeats of one unit; any
+    non-conforming prefix becomes its own (unit, 1) segments. This covers
+    every assigned arch: uniform stacks (u=1), DeepSeek/Kimi's dense-first
+    prefix, Gemma-3's 5:1 unit (u=6), Zamba2's 6-layer unit + tail, and the
+    VLM's [4×self + cross] unit (u=5).
+    """
+    n = len(pattern)
+    best = None  # (prefix_len, unit_len) minimizing HLO size ~ prefix_len + unit_len
+    for u in range(1, max_unit + 1):
+        # longest suffix that is repeats of its first u blocks
+        for prefix in range(0, n):
+            if (n - prefix) % u:
+                continue
+            unit = tuple(pattern[prefix : prefix + u])
+            reps = (n - prefix) // u
+            if all(
+                pattern[prefix + i * u + j].signature == unit[j].signature
+                for i in range(reps)
+                for j in range(u)
+            ):
+                cost = prefix + u
+                if best is None or cost < best[0]:
+                    best = (cost, prefix, u)
+                break  # smallest prefix for this u
+    assert best is not None
+    _, prefix, u = best
+    segments = []
+    for i in range(prefix):
+        segments.append(Segment(unit=(pattern[i],), n_repeat=1))
+    reps = (n - prefix) // u
+    if reps:
+        segments.append(Segment(unit=tuple(pattern[prefix : prefix + u]), n_repeat=reps))
+    return tuple(segments)

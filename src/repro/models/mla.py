@@ -1,0 +1,101 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — used by deepseek-v2-lite.
+
+K/V are compressed through a shared latent ``c_kv ∈ R^{kv_lora_rank}`` plus a
+decoupled RoPE key of ``rope_head_dim``; the decode cache stores only
+``(kv_lora_rank + rope_head_dim)`` floats per token — MLA's entire point.
+
+Train/prefill decompress the latent into per-head K/V and reuse the
+flash-attention core. Decode attends in latent space is possible; we keep
+the decompress-then-attend form (clearer, same cache footprint) and note
+the absorbed-matmul variant as a §Perf lever.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention_train, decode_attention, flash_attention
+from .config import ModelConfig
+from .layers import apply_rope, truncated_normal_init
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, v_d = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(D)
+    sr = 1.0 / np.sqrt(r)
+    return {
+        "w_q": truncated_normal_init(ks[0], (D, H * (nope + rope_d)), cfg.param_dtype, s),
+        "w_dkv": truncated_normal_init(ks[1], (D, r + rope_d), cfg.param_dtype, s),
+        "w_uk": truncated_normal_init(ks[2], (r, H * nope), cfg.param_dtype, sr),
+        "w_uv": truncated_normal_init(ks[3], (r, H * v_d), cfg.param_dtype, sr),
+        "w_o": truncated_normal_init(ks[4], (H * v_d, D), cfg.param_dtype, 1.0 / np.sqrt(H * v_d)),
+    }
+
+
+def _project(params, x, positions, cfg: ModelConfig):
+    """Returns q (B,S,H,nope+rope), latent c_kv (B,S,r), k_rope (B,S,1,rope)."""
+    B, S, _ = x.shape
+    H, nope, rope_d = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q = (x @ params["w_q"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    dkv = x @ params["w_dkv"]  # (B,S,r+rope)
+    c_kv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank :]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
+    return q, c_kv, k_rope
+
+
+def _decompress(params, c_kv, k_rope, cfg: ModelConfig):
+    """Latent → per-head K (nope+rope) and V."""
+    B, S, _ = c_kv.shape
+    H, nope, v_d = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, nope)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, v_d)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.rope_head_dim))], axis=-1)
+    return k, v
+
+
+def mla_train(params, x, cfg: ModelConfig) -> jax.Array:
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, c_kv, k_rope = _project(params, x, positions, cfg)
+    k, v = _decompress(params, c_kv, k_rope, cfg)
+    o = attention_train(q, k, v, chunk=cfg.attn_chunk, impl=cfg.attn_impl)
+    return o.reshape(B, S, -1) @ params["w_o"]
+
+
+def mla_prefill(params, x, cfg: ModelConfig, cache_len: int):
+    """Returns output and the latent cache (B, cache_len, r + rope)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, c_kv, k_rope = _project(params, x, positions, cfg)
+    k, v = _decompress(params, c_kv, k_rope, cfg)
+    o = flash_attention(q, k, v, chunk=cfg.attn_chunk)
+
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    pad = cache_len - S
+    cache = jnp.pad(latent, ((0, 0), (0, pad), (0, 0)))
+    return o.reshape(B, S, -1) @ params["w_o"], cache
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache: jax.Array, length: jax.Array):
+    """x: (B,1,D); cache: (B,Smax,r+rope) latent cache; returns (out, cache)."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(length[None, None], (B, 1))
+    q, c_kv, k_rope = _project(params, x, positions, cfg)
+    new_entry = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)  # (B,1,r+rope)
+    cache = jax.lax.dynamic_update_slice_in_dim(cache, new_entry.astype(cache.dtype), length, axis=1)
+
+    c_all, kr_all = cache[..., : cfg.kv_lora_rank], cache[..., cfg.kv_lora_rank :]
+    k, v = _decompress(params, c_all, kr_all[:, :, None, :], cfg)
+    o = decode_attention(q, k, v, length + 1)
+    return o.reshape(B, 1, -1) @ params["w_o"], cache

@@ -1,0 +1,32 @@
+"""Modality frontend STUBS for the [audio]/[vlm] architectures.
+
+Per the assignment contract, the backbone is real and the frontend is a
+stub: ``input_specs()`` (in each arch config) provides *precomputed*
+frame/patch embeddings. These helpers generate matching synthetic inputs
+for smoke tests and examples.
+
+* musicgen-large  — the EnCodec codec is the stub; the backbone consumes
+  codec *token ids* over the 2048-entry vocabulary (the assignment's
+  vocab=2048), so its inputs look like ordinary LM tokens.
+* llama-3.2-vision-90b — the ViT tower is the stub; cross-attention layers
+  consume precomputed patch embeddings (B, n_patches, d_vision).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def synth_audio_tokens(key, cfg: ModelConfig, batch: int, seq: int) -> jax.Array:
+    """Stand-in for EnCodec output: uniform codec token ids."""
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+
+
+def synth_patch_embeddings(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    """Stand-in for the ViT tower output: (B, n_patches, d_vision) bf16."""
+    return jax.random.normal(key, (batch, cfg.n_patches, cfg.d_vision), jnp.float32).astype(
+        cfg.param_dtype
+    )

@@ -1,0 +1,219 @@
+"""Mamba-2 SSD (state-space duality) mixer — mamba2-1.3b / zamba2 hybrid.
+
+Chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+
+  per chunk of Q tokens: intra-chunk quadratic term (C Bᵀ ⊙ decay-L) · X,
+  inter-chunk linear recurrence over per-chunk states S_k ∈ R^{N×P} per head.
+
+Decode carries (conv window, SSM state) — O(1) per token, which is why the
+``long_500k`` cell runs for this family.
+
+Projections are stored as separate matrices (w_z / w_x / w_bc / w_dt) and
+the depthwise conv is split into an x-part and a B/C-part so that tensor
+parallelism shards the d_inner/head dims cleanly: B/C are group-shared and
+replicated (tiny), all wide tensors shard on heads, and the only mixer
+collective is the row-parallel psum of w_out.
+
+Shapes: x (B,S,D); inner width d_inner = expand·D split into H heads of P;
+B/C projections have G groups of state size N.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import rmsnorm, truncated_normal_init
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads or d_in // cfg.ssm_head_dim
+    P = d_in // H
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return d_in, H, P, G, N
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, H, P, G, N = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(D)
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (H,)) * (np.log(0.1) - np.log(0.001)) + np.log(0.001)
+    )
+    return {
+        "w_z": truncated_normal_init(ks[1], (D, d_in), cfg.param_dtype, s),
+        "w_x": truncated_normal_init(ks[2], (D, d_in), cfg.param_dtype, s),
+        "w_bc": truncated_normal_init(ks[3], (D, 2 * G * N), cfg.param_dtype, s),
+        "w_dt": truncated_normal_init(ks[4], (D, H), cfg.param_dtype, s),
+        "conv_x_w": truncated_normal_init(ks[5], (cfg.ssm_conv, d_in), cfg.param_dtype, 0.3),
+        "conv_x_b": jnp.zeros((d_in,), cfg.param_dtype),
+        "conv_bc_w": truncated_normal_init(ks[6], (cfg.ssm_conv, 2 * G * N), cfg.param_dtype, 0.3),
+        "conv_bc_b": jnp.zeros((2 * G * N,), cfg.param_dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # softplus⁻¹(dt)
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), cfg.param_dtype),
+        "w_out": truncated_normal_init(ks[7], (d_in, D), cfg.param_dtype, 1.0 / np.sqrt(d_in)),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv, kernel K. state: (B, K-1, C) carried for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = state
+    up = jnp.concatenate([pad, u], axis=1)  # (B, S+K-1, C)
+    out = sum(up[:, i : i + u.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = up[:, -(K - 1) :] if K > 1 else None
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) fp32 step sizes; A: (H,) fp32 (<0);
+    Bm/Cm: (B,S,G,N). Returns y (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    rep = H // G
+
+    # reshape to (B, nc, Q, ...)
+    xh = xh.reshape(Bsz, nc, Q, H, P)
+    dt = dt.reshape(Bsz, nc, Q, H)
+    Bm = Bm.reshape(Bsz, nc, Q, G, N)
+    Cm = Cm.reshape(Bsz, nc, Q, G, N)
+
+    a = dt * A[None, None, None, :]  # (B,nc,Q,H) log-decay increments (<0)
+    cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # -- intra-chunk (quadratic) --
+    # L[i,j] = exp(cum_i − cum_j) for i ≥ j
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lexp = jnp.where(mask[None, None, :, :, None], jnp.exp(Li), 0.0)
+    CB = jnp.einsum("bcqgn,bcpgn->bcqpg", Cm, Bm)  # (B,nc,Q,Q,G)
+    CB = jnp.repeat(CB, rep, axis=-1)  # (B,nc,Q,Q,H)
+    xdt = xh * dt[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqph,bcphd->bcqhd", CB * Lexp, xdt.astype(jnp.float32))
+
+    # -- per-chunk states: S_c = Σ_j exp(total − cum_j) B_j ⊗ (x_j dt_j) --
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    Brep = jnp.repeat(Bm, rep, axis=3)  # (B,nc,Q,H,N)
+    S_local = jnp.einsum("bcqhn,bcqhd->bchnd", Brep, (xdt * decay_to_end[..., None]).astype(jnp.float32))
+
+    # -- inter-chunk recurrence over chunk index c: S = exp(total_c)·S_prev + S_local --
+    decay_chunk = jnp.exp(total)  # (B,nc,H)
+
+    def scan_fn(S_prev, inp):
+        d_c, S_loc = inp  # (B,H), (B,H,N,P)
+        S_new = S_prev * d_c[..., None, None] + S_loc
+        return S_new, S_prev
+
+    from .layers import match_vma
+
+    S0 = match_vma(jnp.zeros((Bsz, H, N, P), jnp.float32), xh)
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn,
+        S0,
+        (jnp.moveaxis(decay_chunk, 1, 0), jnp.moveaxis(S_local, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)  # (B,nc,H,N,P) state entering each chunk
+
+    # -- inter-chunk output: y_j += C_j · (exp(cum_j) ⊙ S_prev) --
+    Crep = jnp.repeat(Cm, rep, axis=3)  # (B,nc,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchnd->bcqhd", Crep * jnp.exp(cum)[..., None], S_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, S_final
+
+
+def _project(params, x, cfg: ModelConfig):
+    z = x @ params["w_z"]
+    xr = x @ params["w_x"]
+    bc = x @ params["w_bc"]
+    dt_raw = x @ params["w_dt"]
+    return z, xr, bc, dt_raw
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, conv_x=None, conv_bc=None, ssm_state=None):
+    """Full-sequence forward (train/prefill). Returns (y, (conv_x, conv_bc, state))."""
+    d_in, H, P, G, N = _dims(cfg)
+    Bsz, S, _ = x.shape
+    z, xr, bc, dt_raw = _project(params, x, cfg)
+    xr, conv_x = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"], conv_x)
+    bc, conv_bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], conv_bc)
+
+    xh = xr.reshape(Bsz, S, H, P)
+    Bm = bc[..., : G * N].reshape(Bsz, S, G, N)
+    Cm = bc[..., G * N :].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
+    A = -jnp.exp(params["a_log"])
+
+    y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["w_out"], (conv_x, conv_bc, ssm_state)
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, conv_x, conv_bc, ssm_state):
+    """Single-token step. x: (B,1,D); states as returned by forward/init."""
+    d_in, H, P, G, N = _dims(cfg)
+    Bsz = x.shape[0]
+    z, xr, bc, dt_raw = _project(params, x, cfg)
+
+    def conv_step(u, w, b, state):
+        win = jnp.concatenate([state, u], axis=1)  # (B,K,C)
+        out = jnp.einsum("bkc,kc->bc", win, w) + b[None]
+        return jax.nn.silu(out)[:, None], win[:, 1:]
+
+    xr, conv_x = conv_step(xr, params["conv_x_w"], params["conv_x_b"], conv_x)
+    bc, conv_bc = conv_step(bc, params["conv_bc_w"], params["conv_bc_b"], conv_bc)
+
+    xh = xr.reshape(Bsz, H, P)
+    Bm = bc[..., : G * N].reshape(Bsz, G, N)
+    Cm = bc[..., G * N :].reshape(Bsz, G, N)
+    rep = H // G
+    Brep = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Crep = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"][None])  # (B,H)
+    A = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * A[None])  # (B,H)
+
+    ssm_state = ssm_state * decay[..., None, None] + jnp.einsum(
+        "bhn,bhd->bhnd", Brep, (xh * dt[..., None]).astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnd->bhd", Crep, ssm_state)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["w_out"], (conv_x, conv_bc, ssm_state)
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    d_in, H, P, G, N = _dims(cfg)
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, d_in), cfg.param_dtype),
+        jnp.zeros((batch, cfg.ssm_conv - 1, 2 * G * N), cfg.param_dtype),
+        jnp.zeros((batch, H, N, P), jnp.float32),
+    )

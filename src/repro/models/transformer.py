@@ -1,0 +1,232 @@
+"""Pattern-grouped decoder: scan-over-layer-segments transformer.
+
+The layer pattern is factored into ``Segment``s (config.compile_pattern);
+each repeated segment is executed with ``jax.lax.scan`` over parameters
+stacked along the repeat axis, keeping compiled HLO size O(#distinct block
+kinds) — 61-layer / 1T-param stacks lower in ~1 s.
+
+Entry points:
+  init_params    — full parameter pytree (vmapped init for stacked segments)
+  train_logits   — (B,S) tokens → (B,S,V) logits + MoE aux loss
+  prefill        — prompt → last-position logits + KV/state cache
+  decode_step    — one token + cache → logits + updated cache
+  init_cache     — zeroed cache for a given batch/cache_len
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks as blk
+from .config import SHARED_ATTN, ModelConfig, Segment, compile_pattern
+from .layers import embed_tokens, init_embedding, init_rmsnorm, lm_logits, rmsnorm, truncated_normal_init
+
+
+def _has_shared(cfg: ModelConfig) -> bool:
+    return any(s.mixer == SHARED_ATTN for s in cfg.pattern)
+
+
+def _has_vision(cfg: ModelConfig) -> bool:
+    return cfg.d_vision > 0
+
+
+def segments(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    return compile_pattern(cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    segs = segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: dict = {"embed": init_embedding(keys[0], cfg)}
+
+    seg_params = []
+    for si, seg in enumerate(segs):
+        k_seg = keys[1 + si]
+        pos_params = []
+        for pos, spec in enumerate(seg.unit):
+            k_pos = jax.random.fold_in(k_seg, pos)
+            if seg.n_repeat == 1:
+                pos_params.append(blk.init_block(k_pos, spec, cfg))
+            else:
+                reps = jax.random.split(k_pos, seg.n_repeat)
+                pos_params.append(jax.vmap(lambda k, sp=spec: blk.init_block(k, sp, cfg))(reps))
+        seg_params.append(tuple(pos_params))
+    params["segments"] = tuple(seg_params)
+
+    if _has_shared(cfg):
+        params["shared"] = blk._init_gqa(keys[-3], cfg)
+    if _has_vision(cfg):
+        params["vision_proj"] = truncated_normal_init(
+            keys[-2], (cfg.d_vision, cfg.d_model), cfg.param_dtype, 1.0 / np.sqrt(cfg.d_vision)
+        )
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    return params
+
+
+def _extras(params, cfg: ModelConfig, vision: Optional[jax.Array]):
+    ex = {}
+    if _has_shared(cfg):
+        ex["shared"] = params["shared"]
+    if _has_vision(cfg):
+        if vision is None:
+            raise ValueError(f"{cfg.name} requires `vision` embeddings (modality stub output)")
+        ex["vision"] = vision.astype(cfg.param_dtype) @ params["vision_proj"]
+    return ex
+
+
+# ---------------------------------------------------------------------------
+# Train forward
+# ---------------------------------------------------------------------------
+
+
+REMAT_POLICIES = {
+    "full": None,  # jax.checkpoint default: save nothing, recompute all
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _maybe_remat(fn, remat):
+    if remat is None:
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    policy = getattr(jax.checkpoint_policies, REMAT_POLICIES[remat])
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, vision=None, *, dense_moe=False, remat=None):
+    from .layers import match_vma
+
+    x = embed_tokens(params["embed"], tokens, cfg)
+    ex = _extras(params, cfg, vision)
+    aux = match_vma(jnp.zeros((), jnp.float32), x)
+
+    for seg, seg_params in zip(segments(cfg), params["segments"]):
+        if seg.n_repeat == 1:
+
+            def unit_fn(x, aux, seg_params, ex, _seg=seg):
+                for pos, spec in enumerate(_seg.unit):
+                    x, a = blk.block_train(seg_params[pos], spec, cfg, x, ex, dense_moe=dense_moe)
+                    aux = aux + a
+                return x, aux
+
+            x, aux = _maybe_remat(unit_fn, remat)(x, aux, seg_params, ex)
+        else:
+
+            def body(carry, rep_params, _seg=seg):
+                x, aux = carry
+                for pos, spec in enumerate(_seg.unit):
+                    x, a = blk.block_train(rep_params[pos], spec, cfg, x, ex, dense_moe=dense_moe)
+                    aux = aux + a
+                return (x, aux), None
+
+            (x, aux), _ = jax.lax.scan(_maybe_remat(body, remat), (x, aux), seg_params)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+
+def train_logits(params, cfg: ModelConfig, tokens, vision=None, *, dense_moe=False, remat=None):
+    h, aux = forward_hidden(params, cfg, tokens, vision, dense_moe=dense_moe, remat=remat)
+    return lm_logits(params["embed"], h, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> dict:
+    seg_caches = []
+    for seg in segments(cfg):
+        pos_caches = []
+        for spec in seg.unit:
+            c = blk.init_block_cache(spec, cfg, batch, cache_len)
+            if seg.n_repeat > 1:
+                c = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (seg.n_repeat, *l.shape)), c)
+            pos_caches.append(c)
+        seg_caches.append(tuple(pos_caches))
+    return {"segments": tuple(seg_caches), "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, vision=None, *, dense_moe=False):
+    from .layers import match_vma
+
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens, cfg)
+    ex = _extras(params, cfg, vision)
+    aux = match_vma(jnp.zeros((), jnp.float32), x)
+
+    seg_caches = []
+    for seg, seg_params in zip(segments(cfg), params["segments"]):
+        if seg.n_repeat == 1:
+            pos_caches = []
+            for pos, spec in enumerate(seg.unit):
+                x, a, c = blk.block_prefill(seg_params[pos], spec, cfg, x, cache_len, ex, dense_moe=dense_moe)
+                aux = aux + a
+                pos_caches.append(c)
+            seg_caches.append(tuple(pos_caches))
+        else:
+
+            def body(carry, rep_params, _seg=seg):
+                x, aux = carry
+                caches = []
+                for pos, spec in enumerate(_seg.unit):
+                    x, a, c = blk.block_prefill(rep_params[pos], spec, cfg, x, cache_len, ex, dense_moe=dense_moe)
+                    aux = aux + a
+                    caches.append(c)
+                return (x, aux), tuple(caches)
+
+            (x, aux), stacked = jax.lax.scan(body, (x, aux), seg_params)
+            seg_caches.append(stacked)
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], h[:, -1:], cfg)
+    cache = {"segments": tuple(seg_caches), "length": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, token: jax.Array, *, dense_moe=False):
+    """token: (B, 1) int32. Returns (logits (B,1,V), updated cache)."""
+    x = embed_tokens(params["embed"], token, cfg)
+    ex = {}  # cross blocks read K/V from cache at decode; no vision input needed
+    if _has_shared(cfg):
+        ex["shared"] = params["shared"]
+    length = cache["length"]
+
+    seg_caches = []
+    for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"], cache["segments"]):
+        if seg.n_repeat == 1:
+            pos_caches = []
+            for pos, spec in enumerate(seg.unit):
+                x, c = blk.block_decode(seg_params[pos], spec, cfg, x, seg_cache[pos], length, ex, dense_moe=dense_moe)
+                pos_caches.append(c)
+            seg_caches.append(tuple(pos_caches))
+        else:
+
+            def body(x, xs, _seg=seg):
+                rep_params, rep_cache = xs
+                caches = []
+                for pos, spec in enumerate(_seg.unit):
+                    x, c = blk.block_decode(rep_params[pos], spec, cfg, x, rep_cache[pos], length, ex, dense_moe=dense_moe)
+                    caches.append(c)
+                return x, tuple(caches)
+
+            x, stacked = jax.lax.scan(body, x, (seg_params, seg_cache))
+            seg_caches.append(stacked)
+
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], h, cfg)
+    new_cache = {"segments": tuple(seg_caches), "length": length + 1}
+    return logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))

@@ -1,0 +1,3 @@
+"""Serving substrate: generation loop + streaming-SVD KV compression."""
+from .decode import generate, sample_token
+from .kv_compress import KVCompressionConfig, LowRankKV, compress_head_batch, compress_history, compression_error, lowrank_decode_attention

@@ -1,0 +1,49 @@
+"""Serving drivers: batched generation loop over prefill + decode_step."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+def sample_token(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
+    """logits (B, 1, V) → (B, 1) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits[:, 0] / temperature)[:, None].astype(jnp.int32)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,
+    n_tokens: int,
+    *,
+    key=None,
+    temperature: float = 0.0,
+    vision: Optional[jax.Array] = None,
+    dense_moe: bool = False,
+):
+    """Greedy/temperature generation. prompt: (B, S). Returns (B, n_tokens)."""
+    B, S = prompt.shape
+    key = key if key is not None else jax.random.key(0)
+    cache_len = S + n_tokens
+    logits, cache = prefill(params, cfg, prompt, cache_len, vision=vision, dense_moe=dense_moe)
+
+    step = jax.jit(partial(decode_step, dense_moe=dense_moe), static_argnums=(1,))
+
+    toks = []
+    tok = sample_token(key, logits, temperature)
+    toks.append(tok)
+    for i in range(n_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = step(params, cfg, cache, tok)
+        tok = sample_token(key, logits, temperature)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,107 @@
+"""Streaming low-rank KV-cache compression via Fast SP-SVD (paper Alg. 3).
+
+The K (and V) history of an attention head is a tall matrix H ∈ R^{S×d}.
+During prefill we stream Hᵀ through Algorithm 3's panel loop (one pass,
+O((S+d)·r) memory) and keep rank-r factors
+
+    H ≈ V_s Σ Uᵀ        (V_s ∈ R^{S×r},  U ∈ R^{d×r})
+
+Decode then attends in factor space:
+    scores  = H q  ≈ V_s (Σ (Uᵀ q))        cost S·r + r·d   (vs S·d)
+    output  = pᵀ V_hist ≈ ((pᵀ V_s^v) Σ_v) U_vᵀ
+
+Memory: (S+d)·r vs S·d floats per head → d/r× cache compression.
+This is the paper's single-pass-SVD motivation re-targeted at the
+long-context KV memory wall (beyond-paper integration; see DESIGN.md §4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd import sp_svd_finalize, sp_svd_init, sp_svd_update
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCompressionConfig:
+    rank: int = 16
+    oversample: int = 4  # c = r = oversample·rank for the Alg. 3 sketches
+    panel: int = 1024  # prefill streaming panel (tokens)
+
+
+@dataclasses.dataclass
+class LowRankKV:
+    """Factors per head-batch: H ≈ V_s diag(sigma) Uᵀ."""
+
+    v_s: jax.Array  # (..., S, r)
+    sigma: jax.Array  # (..., r)
+    u: jax.Array  # (..., d, r)
+
+
+def _sizes(d: int, kc: KVCompressionConfig) -> dict:
+    c = min(d, kc.oversample * kc.rank)
+    return dict(c=c, r=c, c0=min(d, 2 * c), r0=2 * c, s_c=min(d, 3 * c), s_r=3 * c)
+
+
+def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
+    """hist: (S, d) one head's K or V history → rank-r factors (single pass).
+
+    Streams Aᵀ = histᵀ (d, S) column panels through Algorithm 3.
+    """
+    S, d = hist.shape
+    sizes = _sizes(d, kc)
+    state = sp_svd_init(key, d, S, sizes=sizes, dtype=jnp.float32)
+    panel = min(kc.panel, S)
+    n_full = S // panel
+    for i in range(n_full):
+        state = sp_svd_update(state, hist[i * panel : (i + 1) * panel].T.astype(jnp.float32))
+    if S % panel:
+        state = sp_svd_update(state, hist[n_full * panel :].T.astype(jnp.float32))
+    U, sig, V = sp_svd_finalize(state, k=kc.rank)  # A=histᵀ: U (d,r), V (S,r)
+    return LowRankKV(v_s=V, sigma=sig, u=U)
+
+
+def compress_head_batch(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
+    """hist: (B, KV, S, d) → vmapped factors (B, KV, ...)."""
+    B, KV, S, d = hist.shape
+    keys = jax.random.split(key, B * KV).reshape(B, KV)
+    fn = lambda k, h: compress_history(k, h, kc)
+    inner = jax.vmap(fn, in_axes=(0, 0))
+    outer = jax.vmap(inner, in_axes=(0, 0))
+    out = outer(keys, hist)
+    return LowRankKV(v_s=out.v_s, sigma=out.sigma, u=out.u)
+
+
+jax.tree_util.register_dataclass(LowRankKV, data_fields=["v_s", "sigma", "u"], meta_fields=[])
+
+
+def lowrank_decode_attention(
+    q: jax.Array,
+    k_fac: LowRankKV,
+    v_fac: LowRankKV,
+    length: jax.Array,
+) -> jax.Array:
+    """q: (B, KV, G, d) grouped queries; factors (B, KV, ...). Returns (B,KV,G,d)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    # scores = V_s (Σ (Uᵀ q))
+    uq = jnp.einsum("bkdr,bkgd->bkgr", k_fac.u, q.astype(jnp.float32))
+    uq = uq * k_fac.sigma[:, :, None, :]
+    s = jnp.einsum("bksr,bkgr->bkgs", k_fac.v_s, uq) * scale  # (B,KV,G,S)
+    S = s.shape[-1]
+    mask = jnp.arange(S) < length
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # output = ((p V_s^v) Σ_v) U_vᵀ
+    pv = jnp.einsum("bkgs,bksr->bkgr", p, v_fac.v_s) * v_fac.sigma[:, :, None, :]
+    return jnp.einsum("bkgr,bkdr->bkgd", pv, v_fac.u)
+
+
+def compression_error(hist: jax.Array, fac: LowRankKV) -> jax.Array:
+    """Relative Frobenius reconstruction error of one head's factors."""
+    rec = (fac.v_s * fac.sigma[None, :]) @ fac.u.T
+    return jnp.linalg.norm(hist - rec) / jnp.maximum(jnp.linalg.norm(hist), 1e-30)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, GMR gradient compression, step builders."""
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state, lr_at, global_norm
+from .grad_compress import CompressionConfig, compress, decompress, compressed_mean_grads, compression_ratio, is_compressible
+from .train_step import cross_entropy, init_train_state, make_compressed_train_step, make_loss_fn, make_train_step

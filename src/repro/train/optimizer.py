@@ -1,0 +1,110 @@
+"""AdamW with cosine schedule, global-norm clipping, dtype policy.
+
+Hand-rolled (no optax in the container): moments in fp32, parameter update
+applied in the parameter dtype. ``master=True`` keeps an fp32 master copy
+(recommended on real bf16 runs; off by default to halve optimizer HBM in
+the dry-run memory story — recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    master: bool = False
+    # "bfloat16" halves optimizer HBM (moments computed in fp32, stored bf16)
+    moments_dtype: str = "float32"
+
+
+def lr_at(step, oc: OptimizerConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = step / jnp.maximum(1.0, oc.warmup_steps)
+    t = (step - oc.warmup_steps) / jnp.maximum(1.0, oc.total_steps - oc.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, oc: OptimizerConfig) -> dict:
+    mdt = jnp.dtype(oc.moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    st = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if oc.master:
+        st["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return st
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, opt_state, params, oc: OptimizerConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    if oc.clip_norm is not None:
+        scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = lr_at(step, oc)
+
+    mdt = jnp.dtype(oc.moments_dtype)
+
+    def upd(g, m, v, p, master=None):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        base = (master if master is not None else p).astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * base)
+        return m.astype(mdt), v.astype(mdt), new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    flat_master = tdef.flatten_up_to(opt_state["master"]) if oc.master else [None] * len(flat_p)
+
+    new_m, new_v, new_p, new_master = [], [], [], []
+    for g, m, v, p, mm in zip(flat_g, flat_m, flat_v, flat_p, flat_master):
+        m2, v2, full = upd(g, m, v, p, mm)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(full.astype(p.dtype))
+        if oc.master:
+            new_master.append(full)
+
+    new_state = {
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+        "step": step,
+    }
+    if oc.master:
+        new_state["master"] = jax.tree.unflatten(tdef, new_master)
+    return jax.tree.unflatten(tdef, new_p), new_state, {"grad_norm": gnorm, "lr": lr}

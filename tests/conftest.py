@@ -1,0 +1,12 @@
+"""Test session config. NOTE: no XLA_FLAGS here by design — unit/smoke
+tests run on the single real CPU device; multi-device scenarios re-exec
+themselves in a subprocess (tests/multidev_scenario.py)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # for `benchmarks`
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

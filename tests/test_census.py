@@ -1,0 +1,71 @@
+"""Loop-aware HLO census: the roofline's measurement layer."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_census import _wire_factor, census
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_flops_plain_matmul():
+    f = lambda a, b: a @ b
+    txt = _compile_text(f, jax.ShapeDtypeStruct((64, 128), jnp.float32), jax.ShapeDtypeStruct((128, 96), jnp.float32))
+    c = census(txt)
+    assert abs(c["flops"] - 2 * 64 * 128 * 96) / (2 * 64 * 128 * 96) < 1e-6
+
+
+def test_flops_scan_multiplied():
+    def f(w, x):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    txt = _compile_text(f, jax.ShapeDtypeStruct((256, 256), jnp.float32), jax.ShapeDtypeStruct((64, 256), jnp.float32))
+    c = census(txt)
+    true = 8 * 2 * 64 * 256 * 256
+    assert abs(c["flops"] - true) / true < 1e-6
+    assert c["while_trip_counts"][0]["trip"] == 8
+
+
+def test_flops_nested_scan():
+    def g(w, x):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            return jax.lax.scan(inner, x, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    txt = _compile_text(g, jax.ShapeDtypeStruct((128, 128), jnp.float32), jax.ShapeDtypeStruct((32, 128), jnp.float32))
+    c = census(txt)
+    true = 12 * 2 * 32 * 128 * 128
+    assert abs(c["flops"] - true) / true < 1e-6
+    assert sorted(t["trip"] for t in c["while_trip_counts"]) == [3, 4]
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+    txt = _compile_text(f, jax.ShapeDtypeStruct((4, 128, 64), jnp.float32), jax.ShapeDtypeStruct((4, 64, 96), jnp.float32))
+    c = census(txt)
+    true = 2 * 4 * 128 * 64 * 96
+    assert abs(c["flops"] - true) / true < 1e-6
+
+
+def test_wire_factors():
+    assert _wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
+    assert _wire_factor("all-gather", 16) == pytest.approx(15 / 16)
+    assert _wire_factor("reduce-scatter", 16) == 15
+    assert _wire_factor("collective-permute", 2) == 1.0
+
+
+def test_hbm_bytes_reasonable():
+    """bytes of a simple matmul ≥ operands + result, ≤ a few passes."""
+    m, k, n = 512, 512, 512
+    f = lambda a, b: a @ b
+    txt = _compile_text(f, jax.ShapeDtypeStruct((m, k), jnp.float32), jax.ShapeDtypeStruct((k, n), jnp.float32))
+    c = census(txt)
+    lo = 4 * (m * k + k * n + m * n)
+    assert lo <= c["hbm_bytes"] <= 4 * lo

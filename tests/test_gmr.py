@@ -1,0 +1,110 @@
+"""Fast GMR (Algorithm 1, Theorem 1) — core correctness + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import error_ratio, exact_gmr, fast_gmr, fast_gmr_core, rho, sketched_fro_norm
+from repro.core.gmr import _solve_least_squares
+
+
+def _problem(key, m=300, n=250, c=12, r=12, decay=1.0):
+    ks = jax.random.split(key, 3)
+    rank = min(m, n)
+    U, _ = jnp.linalg.qr(jax.random.normal(ks[0], (m, rank)))
+    V, _ = jnp.linalg.qr(jax.random.normal(ks[1], (n, rank)))
+    sv = jnp.arange(1, rank + 1, dtype=jnp.float32) ** -decay
+    A = (U * sv[None]) @ V.T
+    GC = jax.random.normal(jax.random.fold_in(key, 5), (n, c))
+    GR = jax.random.normal(jax.random.fold_in(key, 6), (r, m))
+    return A, A @ GC, GR @ A
+
+
+def test_exact_gmr_is_optimal():
+    """X* minimizes — any perturbation increases the residual (Lemma 2)."""
+    A, C, R = _problem(jax.random.key(0))
+    X = exact_gmr(A, C, R)
+    base = float(jnp.linalg.norm(A - C @ X @ R))
+    for t in range(5):
+        dX = 0.1 * jax.random.normal(jax.random.key(10 + t), X.shape)
+        assert float(jnp.linalg.norm(A - C @ (X + dX) @ R)) >= base - 1e-4
+
+
+def test_lemma2_pythagorean():
+    """||A − CX̃R||² = ||A − CX*R||² + ||C(X*−X̃)R||² for any X̃."""
+    A, C, R = _problem(jax.random.key(1))
+    Xs = exact_gmr(A, C, R)
+    for t in range(3):
+        Xt = Xs + 0.2 * jax.random.normal(jax.random.key(t), Xs.shape)
+        lhs = jnp.linalg.norm(A - C @ Xt @ R) ** 2
+        rhs = jnp.linalg.norm(A - C @ Xs @ R) ** 2 + jnp.linalg.norm(C @ (Xs - Xt) @ R) ** 2
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sketch", ["gaussian", "countsketch", "osnap", "srht"])
+def test_fast_gmr_relative_error(sketch):
+    """Theorem 1: moderate sketch sizes give small relative error."""
+    A, C, R = _problem(jax.random.key(2))
+    errs = [
+        float(error_ratio(A, C, fast_gmr(jax.random.key(50 + t), A, C, R, 120, 120, sketch_c=sketch), R))
+        for t in range(3)
+    ]
+    assert np.mean(errs) < 0.35, (sketch, errs)
+
+
+def test_error_decreases_with_sketch_size():
+    A, C, R = _problem(jax.random.key(3))
+    means = []
+    for s in (24, 72, 144):
+        errs = [
+            float(error_ratio(A, C, fast_gmr(jax.random.key(70 + t), A, C, R, s, s), R))
+            for t in range(4)
+        ]
+        means.append(np.mean(errs))
+    assert means[2] < means[0], means
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**30), decay=st.floats(0.3, 1.5))
+def test_error_ratio_nonnegative(seed, decay):
+    """error_ratio ≥ −ε for ANY sketched solution (X* is the minimizer)."""
+    A, C, R = _problem(jax.random.key(seed), m=120, n=100, c=6, r=6, decay=decay)
+    X = fast_gmr(jax.random.fold_in(jax.random.key(seed), 1), A, C, R, 40, 40)
+    assert float(error_ratio(A, C, X, R)) > -1e-3
+
+
+def test_rho_positive_and_finite():
+    A, C, R = _problem(jax.random.key(4))
+    val = float(rho(A, C, R))
+    assert 0 < val < 100
+
+
+def test_lstsq_solver_matches_numpy():
+    key = jax.random.key(5)
+    B = jax.random.normal(key, (50, 8))
+    Y = jax.random.normal(jax.random.fold_in(key, 1), (50, 6))
+    X = _solve_least_squares(B, Y)
+    Xnp, *_ = np.linalg.lstsq(np.asarray(B), np.asarray(Y), rcond=None)
+    np.testing.assert_allclose(X, Xnp, atol=1e-4)
+
+
+def test_fast_gmr_core_matches_full():
+    """Core solve from pre-sketched pieces == fast_gmr with same sketches."""
+    from repro.core.sketching import draw_sketch
+
+    A, C, R = _problem(jax.random.key(6))
+    k1, k2 = jax.random.split(jax.random.key(7))
+    S_C = draw_sketch(k1, "gaussian", 100, A.shape[0])
+    S_R = draw_sketch(k2, "gaussian", 100, A.shape[1])
+    X1 = fast_gmr_core(S_C.apply(C), S_R.apply_t(S_C.apply(A)), S_R.apply_t(R))
+    err = float(error_ratio(A, C, X1, R))
+    assert err < 0.5
+
+
+def test_sketched_fro_norm():
+    A = jax.random.normal(jax.random.key(8), (400, 300))
+    est = float(sketched_fro_norm(jax.random.key(9), A, 2000, 2000))
+    true = float(jnp.linalg.norm(A))
+    assert abs(est - true) / true < 0.15

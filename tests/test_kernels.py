@@ -1,0 +1,76 @@
+"""Per-kernel allclose sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref
+
+TWOSIDE_SHAPES = [
+    (64, 300, 200, 64),  # unaligned m/n → padding path
+    (128, 512, 512, 96),
+    (32, 130, 260, 48),
+    (256, 1024, 384, 128),
+    (128, 256, 256, 128),  # exactly aligned
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", TWOSIDE_SHAPES)
+def test_twoside_sketch_allclose(shape, dtype):
+    s_c, m, n, s_r = shape
+    ks = jax.random.split(jax.random.key(sum(shape)), 3)
+    Sc = jax.random.normal(ks[0], (s_c, m), jnp.float32).astype(dtype)
+    A = jax.random.normal(ks[1], (m, n), jnp.float32).astype(dtype)
+    SrT = jax.random.normal(ks[2], (n, s_r), jnp.float32).astype(dtype)
+    out = twoside_sketch(Sc, A, SrT, interpret=True)
+    ref = twoside_sketch_ref(Sc, A, SrT)
+    tol = 1e-5 if dtype == jnp.float32 else 2.5e-2
+    rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < tol, (shape, dtype, rel)
+
+
+CS_SHAPES = [(64, 300, 200), (100, 512, 384), (200, 1000, 130), (128, 256, 256)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", CS_SHAPES)
+def test_countsketch_allclose(shape, dtype):
+    s, m, n = shape
+    ks = jax.random.split(jax.random.key(sum(shape)), 3)
+    h = jax.random.randint(ks[0], (m,), 0, s)
+    sg = jax.random.rademacher(ks[1], (m,), jnp.float32)
+    A = jax.random.normal(ks[2], (m, n), jnp.float32).astype(dtype)
+    out = countsketch_apply(h, sg, A, s, interpret=True)
+    ref = countsketch_ref(h, sg, A, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2.5e-2
+    rel = float(jnp.max(jnp.abs(out - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < tol, (shape, dtype, rel)
+
+
+def test_countsketch_padding_no_bucket_pollution():
+    """Padded rows must not contribute to any bucket (zero signs)."""
+    s, m, n = 64, 100, 50  # m=100 pads to 256
+    ks = jax.random.split(jax.random.key(0), 3)
+    h = jax.random.randint(ks[0], (m,), 0, s)
+    sg = jax.random.rademacher(ks[1], (m,), jnp.float32)
+    A = jnp.ones((m, n))
+    out = countsketch_apply(h, sg, A, s, interpret=True)
+    ref = countsketch_ref(h, sg, A, s)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_twoside_block_shape_sweep():
+    """Same result across BlockSpec tilings (grid decomposition invariance)."""
+    s_c, m, n, s_r = 128, 512, 512, 128
+    ks = jax.random.split(jax.random.key(1), 3)
+    Sc = jax.random.normal(ks[0], (s_c, m))
+    A = jax.random.normal(ks[1], (m, n))
+    SrT = jax.random.normal(ks[2], (n, s_r))
+    ref = twoside_sketch_ref(Sc, A, SrT)
+    scale = float(jnp.max(jnp.abs(ref)))
+    for bm, bn in [(128, 128), (256, 256), (512, 128)]:
+        out = twoside_sketch(Sc, A, SrT, block_m=bm, block_n=bn, interpret=True)
+        # different tilings reorder the fp32 reduction; tolerance scales with |M|
+        np.testing.assert_allclose(out, ref, rtol=0, atol=2e-4 * scale)

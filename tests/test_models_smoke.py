@@ -1,0 +1,187 @@
+"""REQUIRED per-arch smoke tests: reduced same-family configs, one forward
+/ train step on CPU, asserting output shapes + no NaNs; plus prefill/decode
+consistency and the family-specific numerics (SSD scan, flash attention)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+    segments,
+    train_logits,
+)
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.modality import synth_patch_embeddings
+from repro.models.ssm import init_mamba2, init_mamba2_state, mamba2_decode, mamba2_forward, ssd_chunked
+
+ARCH_IDS = list(ARCHS)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_and_decode(arch_id):
+    cfg = ARCHS[arch_id].smoke_config()
+    params = init_params(jax.random.key(1), cfg)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    vision = synth_patch_embeddings(jax.random.key(3), cfg, B) if cfg.d_vision else None
+
+    logits, aux = train_logits(params, cfg, toks, vision, dense_moe=True)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch_id}: NaN in logits"
+    assert bool(jnp.isfinite(aux))
+
+    lg, cache = prefill(params, cfg, toks, cache_len=S + 4, vision=vision, dense_moe=True)
+    np.testing.assert_allclose(lg[:, 0], logits[:, -1], atol=1e-4)
+
+    lg2, cache = decode_step(params, cfg, cache, jnp.argmax(lg, -1).astype(jnp.int32), dense_moe=True)
+    assert lg2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(lg2)))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    """One gradient step: finite loss + grads with the right structure."""
+    from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+    cfg = ARCHS[arch_id].smoke_config()
+    oc = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    params = init_params(jax.random.key(1), cfg)
+    state = {"params": params, "opt": init_opt_state(params, oc)}
+    step = make_train_step(cfg, oc, remat=None, dense_moe=True)
+    batch = {"tokens": jax.random.randint(jax.random.key(4), (2, 16), 0, cfg.vocab_size)}
+    if cfg.d_vision:
+        batch["vision"] = synth_patch_embeddings(jax.random.key(5), cfg, 2)
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), (arch_id, metrics)
+    assert float(metrics["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_matches_assignment(arch_id):
+    """Exact assignment numbers in every full config (no allocation)."""
+    spec = {
+        "mamba2-1.3b": dict(n_layers=48, d_model=2048, vocab_size=50280, ssm_state=128),
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32000, ssm_state=64),
+        "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_ff_expert=2048, vocab_size=163840, n_experts=384, moe_top_k=8),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16, d_ff_expert=1408, vocab_size=102400, n_experts=64, moe_top_k=6, kv_lora_rank=512, n_shared_experts=2),
+        "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, d_ff=8192, vocab_size=128256),
+        "phi4-mini-3.8b": dict(n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, d_ff=8192, vocab_size=200064),
+        "gemma3-12b": dict(n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8, d_ff=15360, vocab_size=262144),
+        "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=14336, vocab_size=131072),
+        "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=2048),
+        "llama-3.2-vision-90b": dict(n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=28672, vocab_size=128256),
+    }[arch_id]
+    cfg = ARCHS[arch_id].full_config()
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, (arch_id, k, getattr(cfg, k), v)
+
+
+def test_gemma3_pattern_is_5to1():
+    cfg = ARCHS["gemma3-12b"].full_config()
+    kinds = [b.mixer for b in cfg.pattern]
+    assert kinds.count("attn") == 8 and kinds.count("attn_local") == 40
+    for i in range(5, 48, 6):
+        assert kinds[i] == "attn"
+
+
+def test_zamba2_shared_blocks():
+    cfg = ARCHS["zamba2-1.2b"].full_config()
+    shared = [i for i, b in enumerate(cfg.pattern) if b.mixer == "shared_attn"]
+    assert len(shared) == 6
+    params = init_params(jax.random.key(0), ARCHS["zamba2-1.2b"].smoke_config())
+    assert "shared" in params  # single weight collection for all occurrences
+
+
+def test_segment_compilation():
+    """compile_pattern factors every arch into few scan segments."""
+    for arch_id, mod in ARCHS.items():
+        segs = segments(mod.full_config())
+        n = sum(len(s.unit) * s.n_repeat for s in segs)
+        assert n == mod.full_config().n_layers, arch_id
+        assert len(segs) <= 3, (arch_id, len(segs))
+
+
+# ---- family numerics ----
+
+
+def _ref_attn(q, k, v, window=None):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bphd->bhqp", q, kk).astype(jnp.float32) / np.sqrt(D)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    return jnp.einsum("bhqp,bphd->bqhd", jax.nn.softmax(s, -1), vv).astype(q.dtype)
+
+
+@pytest.mark.parametrize("case", [(2, 128, 4, 2, 16, None, 32), (1, 200, 8, 8, 8, None, 64),
+                                  (2, 256, 4, 1, 16, 48, 32), (1, 96, 2, 2, 8, 20, 32)])
+def test_flash_attention_matches_naive(case):
+    B, S, H, KV, D, window, chunk = case
+    ks = jax.random.split(jax.random.key(sum(x or 0 for x in case)), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    np.testing.assert_allclose(
+        flash_attention(q, k, v, window=window, chunk=chunk), _ref_attn(q, k, v, window), atol=2e-5
+    )
+    g1 = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v, window=window, chunk=chunk) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(_ref_attn(q, k, v, window) ** 2))(q)
+    np.testing.assert_allclose(g1, g2, atol=5e-4)
+
+
+def test_ssd_chunked_matches_sequential():
+    B, S, H, P, G, N = 2, 100, 4, 8, 2, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.3
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+
+    St = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        dcy = jnp.exp(dt[:, t] * A[None])
+        Bt = jnp.repeat(Bm[:, t], H // G, axis=1)
+        Ct = jnp.repeat(Cm[:, t], H // G, axis=1)
+        St = St * dcy[..., None, None] + jnp.einsum("bhn,bhd->bhnd", Bt, xh[:, t] * dt[:, t][..., None])
+        ys.append(jnp.einsum("bhn,bhnd->bhd", Ct, St))
+    y_ref = jnp.stack(ys, axis=1)
+    y, S_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(y, y_ref, atol=2e-5)
+    np.testing.assert_allclose(S_final, St, atol=2e-5)
+
+
+def test_mamba2_forward_decode_consistency():
+    from repro.models.config import MAMBA2, NONE, BlockSpec, ModelConfig
+
+    cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=32, n_heads=0, n_kv_heads=0,
+                      d_ff=0, vocab_size=64, pattern=(BlockSpec(MAMBA2, NONE),),
+                      ssm_state=16, ssm_heads=4, ssm_head_dim=16, ssm_groups=2, ssm_chunk=16,
+                      dtype="float32")
+    p = init_mamba2(jax.random.key(1), cfg)
+    x = jax.random.normal(jax.random.key(2), (2, 24, 32))
+    y_full, (cx, cbc, st) = mamba2_forward(p, x, cfg)
+    cx2, cbc2, st2 = init_mamba2_state(cfg, 2)
+    outs = []
+    for t in range(24):
+        o, (cx2, cbc2, st2) = mamba2_decode(p, x[:, t : t + 1], cfg, cx2, cbc2, st2)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), y_full, atol=2e-5)
+    np.testing.assert_allclose(st2, st, atol=2e-5)

@@ -1,0 +1,65 @@
+"""Regression locks on the §Perf hillclimb results (pure artifact reads)."""
+
+import glob
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "artifacts", "dryrun")
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def _load(name):
+    path = os.path.join(ART, name)
+    if not os.path.exists(path):
+        pytest.skip(f"artifact {name} not generated in this environment")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _terms(r):
+    wire = sum(v["wire_bytes"] for v in r["collectives"].values())
+    return r["flops_per_device"] / PEAK, r["hbm_bytes_per_device"] / HBM, wire / ICI
+
+
+def test_A1_flash_vjp_cuts_memory_term():
+    base = _load("llama3.2-1b__train_4k__16x16.json")
+    opt = _load("llama3.2-1b__train_4k__16x16__A1_flashvjp.json")
+    _, m0, _ = _terms(base)
+    _, m1, _ = _terms(opt)
+    assert m1 < 0.75 * m0, (m0, m1)
+
+
+def test_A2_microbatch_fits_hbm():
+    opt = _load("llama3.2-1b__train_4k__16x16__A2_flashvjp_micro2.json")
+    assert opt["memory"]["peak_estimate_bytes"] < 16e9
+
+
+def test_B5_grouped_dispatch_kills_replicated_compute():
+    base = _load("kimi-k2-1t-a32b__train_4k__16x16.json")
+    opt = _load("kimi-k2-1t-a32b__train_4k__16x16__B5_grouped_dispatch.json")
+    c0, m0, _ = _terms(base)
+    c1, m1, _ = _terms(opt)
+    assert c1 < 0.3 * c0, (c0, c1)
+    assert m1 < 0.7 * m0, (m0, m1)
+
+
+def test_C2_seq_parallel_cuts_collective_term():
+    base = _load("mamba2-1.3b__prefill_32k__16x16.json")
+    opt = _load("mamba2-1.3b__prefill_32k__16x16__C2_seqparallel_chunk512.json")
+    _, _, k0 = _terms(base)
+    _, _, k1 = _terms(opt)
+    assert k1 < 0.5 * k0, (k0, k1)
+
+
+def test_baseline_cells_complete_on_both_meshes():
+    untagged = [p for p in glob.glob(os.path.join(ART, "*.json"))
+                if json.load(open(p)).get("tag", "") == ""]
+    if not untagged:
+        pytest.skip("no artifacts")
+    meshes = {"16x16": 0, "2x16x16": 0}
+    for p in untagged:
+        meshes[json.load(open(p))["mesh"]] += 1
+    assert meshes["16x16"] == 33 and meshes["2x16x16"] == 33, meshes

@@ -1,0 +1,46 @@
+"""§3.2 projections: Proposition 1 + Theorem 2 machinery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import psd_project, sym_project
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**30), n=st.integers(3, 30))
+def test_proposition1_nonexpansive_sym(seed, n):
+    """||X − Π(X̂)||_F ≤ ||X − X̂||_F for X in the convex set (symmetric)."""
+    key = jax.random.key(seed)
+    S = jax.random.normal(key, (n, n))
+    X = 0.5 * (S + S.T)  # a point inside H^n
+    Xhat = X + jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    proj = sym_project(Xhat)
+    assert float(jnp.linalg.norm(X - proj)) <= float(jnp.linalg.norm(X - Xhat)) + 1e-5
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**30), n=st.integers(3, 25))
+def test_proposition1_nonexpansive_psd(seed, n):
+    key = jax.random.key(seed)
+    B = jax.random.normal(key, (n, n))
+    X = B @ B.T  # PSD point
+    Xhat = X + 0.7 * jax.random.normal(jax.random.fold_in(key, 1), (n, n))
+    proj = psd_project(Xhat)
+    assert float(jnp.linalg.norm(X - proj)) <= float(jnp.linalg.norm(X - Xhat)) + 1e-4
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**30))
+def test_psd_project_is_psd_and_idempotent(seed):
+    X = jax.random.normal(jax.random.key(seed), (20, 20))
+    P = psd_project(X)
+    ev = jnp.linalg.eigvalsh(0.5 * (P + P.T))
+    assert float(ev.min()) > -1e-4
+    np.testing.assert_allclose(psd_project(P), P, atol=1e-4)
+
+
+def test_sym_project_formula():
+    X = jax.random.normal(jax.random.key(0), (9, 9))
+    np.testing.assert_allclose(sym_project(X), (X + X.T) / 2)

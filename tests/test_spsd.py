@@ -1,0 +1,72 @@
+"""§4 SPSD approximation: Algorithm 2 vs baselines (Theorem 3 claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import clustered_points, tune_rbf_sigma
+from repro.core import (
+    fast_spsd_wang,
+    faster_spsd,
+    nystrom,
+    optimal_core,
+    rbf_kernel_oracle,
+    spsd_error_ratio,
+)
+
+
+@pytest.fixture(scope="module")
+def kernel_setup():
+    n, d, k = 600, 24, 15
+    X = clustered_points(jax.random.key(0), n, d, n_clusters=10, spread=0.6)
+    sigma = tune_rbf_sigma(X, k=k, target_eta=0.75)
+    oracle = rbf_kernel_oracle(X, sigma)
+    return n, oracle, oracle(None, None)
+
+
+def _mean_err(fn, K, trials=3):
+    return float(np.mean([float(spsd_error_ratio(K, fn(jax.random.key(31 * t)))) for t in range(trials)]))
+
+
+def test_alg2_close_to_optimal_at_s10c(kernel_setup):
+    """§6.2: faster-SPSD ≈ optimal once s = 10c."""
+    n, oracle, K = kernel_setup
+    c = 30
+    ours = _mean_err(lambda k: faster_spsd(k, oracle, n, c, 10 * c), K)
+    opt = _mean_err(lambda k: optimal_core(k, oracle, n, c), K)
+    assert ours < opt * 1.10, (ours, opt)
+
+
+def test_alg2_beats_wang16_at_small_s(kernel_setup):
+    """Table 7 pattern: fast-SPSD (Wang'16b) much worse at small s."""
+    n, oracle, K = kernel_setup
+    c, s = 30, 8 * 30
+    ours = _mean_err(lambda k: faster_spsd(k, oracle, n, c, s), K)
+    wang = _mean_err(lambda k: fast_spsd_wang(k, oracle, n, c, s), K)
+    assert ours < wang, (ours, wang)
+
+
+def test_alg2_beats_nystrom(kernel_setup):
+    n, oracle, K = kernel_setup
+    c = 30
+    ours = _mean_err(lambda k: faster_spsd(k, oracle, n, c, 10 * c), K, trials=4)
+    nys = _mean_err(lambda k: nystrom(k, oracle, n, c), K, trials=4)
+    assert ours <= nys * 1.02, (ours, nys)
+
+
+def test_core_is_psd(kernel_setup):
+    n, oracle, K = kernel_setup
+    res = faster_spsd(jax.random.key(5), oracle, n, 30, 200)
+    ev = jnp.linalg.eigvalsh(0.5 * (res.X + res.X.T))
+    assert float(ev.min()) > -1e-4
+
+
+def test_entry_observation_accounting(kernel_setup):
+    """Theorem 3: N = nc + s² entries."""
+    n, oracle, K = kernel_setup
+    c, s = 30, 150
+    res = faster_spsd(jax.random.key(6), oracle, n, c, s)
+    assert res.entries_observed == n * c + s * s
+    res2 = nystrom(jax.random.key(7), oracle, n, c)
+    assert res2.entries_observed == n * c

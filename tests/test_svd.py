@@ -1,0 +1,95 @@
+"""§5 single-pass SVD: Algorithm 3 streaming semantics + Theorem 4 claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import powerlaw_matrix
+from repro.core import (
+    fast_sp_svd,
+    practical_sp_svd,
+    sp_svd_finalize,
+    sp_svd_init,
+    sp_svd_update,
+    svd_error_ratio,
+)
+
+
+@pytest.fixture(scope="module")
+def A():
+    return powerlaw_matrix(jax.random.key(0), 500, 400, 1.0)
+
+
+SIZES = dict(c=40, r=40, c0=120, r0=120, s_c=120, s_r=120)
+
+
+def test_streaming_matches_oneshot(A):
+    """Panel-streamed accumulators == single-panel pass (algebraic identity)."""
+    m, n = A.shape
+    s1 = sp_svd_init(jax.random.key(1), m, n, sizes=SIZES)
+    for off in range(0, n, 100):
+        s1 = sp_svd_update(s1, A[:, off : off + 100])
+    s2 = sp_svd_init(jax.random.key(1), m, n, sizes=SIZES)
+    s2 = sp_svd_update(s2, A)
+    np.testing.assert_allclose(s1.C, s2.C, atol=2e-3)
+    np.testing.assert_allclose(s1.R, s2.R, atol=2e-3)
+    np.testing.assert_allclose(s1.M, s2.M, atol=2e-3)
+
+
+def test_panel_size_invariance(A):
+    """Different L panels give identical finalized factors (same sketches)."""
+    outs = []
+    for panel in (64, 200):
+        U, S, V = fast_sp_svd(jax.random.key(2), A, sizes=SIZES, panel=panel)
+        outs.append((U * S[None]) @ V.T)
+    np.testing.assert_allclose(outs[0], outs[1], atol=5e-3)
+
+
+def test_relative_error_bound(A):
+    """Theorem 4: (1+ε) error vs ||A − A_k||_F at moderate sketch sizes."""
+    k = 10
+    errs = [
+        float(svd_error_ratio(A, *fast_sp_svd(jax.random.key(10 + t), A, sizes=SIZES), k))
+        for t in range(3)
+    ]
+    assert np.mean(errs) < 0.5, errs
+
+
+def test_fast_beats_practical(A):
+    """§6.3 headline: Fast SP-SVD ≪ Practical SP-SVD at equal budget."""
+    k = 10
+    e_fast = np.mean([
+        float(svd_error_ratio(A, *fast_sp_svd(jax.random.key(20 + t), A, sizes=SIZES), k))
+        for t in range(3)
+    ])
+    e_prac = np.mean([
+        float(svd_error_ratio(A, *practical_sp_svd(jax.random.key(30 + t), A, c=40, r=40), k))
+        for t in range(3)
+    ])
+    assert e_fast < e_prac, (e_fast, e_prac)
+
+
+def test_error_decreases_with_budget(A):
+    k = 10
+    errs = []
+    for f in (2, 6):
+        sizes = dict(c=f * k, r=f * k, c0=3 * f * k, r0=3 * f * k, s_c=3 * f * k, s_r=3 * f * k)
+        e = np.mean([
+            float(svd_error_ratio(A, *fast_sp_svd(jax.random.key(40 + t), A, sizes=sizes), k))
+            for t in range(3)
+        ])
+        errs.append(e)
+    assert errs[1] < errs[0], errs
+
+
+def test_fixed_rank_truncation(A):
+    U, S, V = fast_sp_svd(jax.random.key(3), A, sizes=SIZES, fixed_rank=10)
+    assert U.shape[1] == 10 and S.shape == (10,) and V.shape[1] == 10
+
+
+def test_orthonormal_outputs(A):
+    U, S, V = fast_sp_svd(jax.random.key(4), A, sizes=SIZES)
+    np.testing.assert_allclose(U.T @ U, np.eye(U.shape[1]), atol=1e-4)
+    np.testing.assert_allclose(V.T @ V, np.eye(V.shape[1]), atol=1e-4)
+    assert bool(jnp.all(S[:-1] >= S[1:]))  # sorted singular values
