@@ -1,0 +1,17 @@
+# Convenience targets mirroring CI. Tier-1 verify == `make test`.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:  ## skip the slow multi-device subprocess scenarios
+	$(PY) -m pytest -x -q -m "not slow"
+
+smoke:  ## quick CUR benchmark (CI artifact check)
+	$(PY) -m benchmarks.cur_decomp --smoke
+
+bench:  ## full benchmark harness, CSV on stdout
+	$(PY) -m benchmarks.run

@@ -1,12 +1,44 @@
-"""Shared benchmark utilities: timing, synthetic matrices, CSV rows."""
+"""Shared benchmark utilities: timing, synthetic matrices, CSV rows, and
+the standard ``BENCH_<module>.json`` artifact writer (adopted by
+``cur_decomp``; wiring the remaining modules through it is open)."""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.data.synthetic import lowrank_plus_noise, powerlaw_matrix, sparse_matrix  # noqa: F401 — re-export
+
+
+def write_bench_json(module: str, rows: list, meta: dict | None = None, out_dir: str | None = None) -> str:
+    """Write the standard ``BENCH_<module>.json`` artifact and return its path.
+
+    Shape: ``{"bench", "schema", "meta", "rows"}`` where each row keeps the
+    CSV contract keys (``name``, ``us_per_call``, ``derived``); private
+    ``_``-prefixed keys are stripped.
+    """
+    clean = [{k: v for k, v in row.items() if not k.startswith("_")} for row in rows]
+    artifact = {
+        "bench": module,
+        "schema": 1,
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "platform": platform.platform(),
+            **(meta or {}),
+        },
+        "rows": clean,
+    }
+    path = os.path.join(out_dir or os.getcwd(), f"BENCH_{module}.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2)
+    return path
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
@@ -19,25 +51,6 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
         jax.block_until_ready(fn(*args, **kw))
         ts.append((time.perf_counter() - t0) * 1e6)
     return float(np.median(ts))
-
-
-def powerlaw_matrix(key, m: int, n: int, decay: float = 1.0, dtype=jnp.float32):
-    """Dense matrix with σ_i ∝ i^-decay (the spectral profile of the paper's
-    dense LIBSVM datasets; offline substitution — see DESIGN.md §8)."""
-    k1, k2 = jax.random.split(key)
-    r = min(m, n)
-    U, _ = jnp.linalg.qr(jax.random.normal(k1, (m, r), dtype))
-    V, _ = jnp.linalg.qr(jax.random.normal(k2, (n, r), dtype))
-    sv = jnp.arange(1, r + 1, dtype=dtype) ** (-decay)
-    return (U * sv[None, :]) @ V.T
-
-
-def sparse_matrix(key, m: int, n: int, density: float = 0.002, dtype=jnp.float32):
-    """Sparse-profile matrix (rcv1/news20 substitution): Bernoulli mask × normal."""
-    k1, k2 = jax.random.split(key)
-    mask = jax.random.bernoulli(k1, density, (m, n))
-    vals = jax.random.normal(k2, (m, n), dtype)
-    return jnp.where(mask, vals, 0.0)
 
 
 def clustered_points(key, n: int, d: int, n_clusters: int = 10, spread: float = 1.0):

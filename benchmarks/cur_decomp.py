@@ -1,0 +1,113 @@
+"""CUR decomposition benchmark: error-vs-time for the core-solve paths.
+
+Sweeps matrix sizes (up to 4096² in full mode) and methods:
+
+* ``exact``       — oracle core ``U* = C† A R†`` (O(c·m·n) matmul-bound)
+* ``fast-lev``    — Algorithm-1 sketched core with leverage-score *sampling*
+                    sketches (row gathers; Table-3) — the deployable path
+* ``fast-gauss``  — Algorithm-1 with dense Gaussian sketches (Table-2)
+* ``cross``       — uniform-Nyström-style baseline ``U = W†`` with
+                    ``W = A[row_idx][:, col_idx]`` (cheapest, weakest error)
+
+All methods share one (col_idx, row_idx) set per matrix so the reported
+``resid_ratio`` (= ‖A−CUR‖_F / ‖A−CU*R‖_F) isolates core quality.
+Emits CSV rows via ``benchmarks.run`` and the standard
+``BENCH_cur_decomp.json`` artifact (``benchmarks.common.write_bench_json``).
+
+  PYTHONPATH=src python -m benchmarks.cur_decomp [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cur import cur_sketch_sizes, exact_cur, fast_cur
+from repro.cur.selection import select_columns, select_rows
+
+from .common import powerlaw_matrix, sparse_matrix, time_call, write_bench_json
+
+
+def _cross_core(A, col_idx, row_idx):
+    """Uniform-Nyström-style: pinv of the intersection block W."""
+    W = jnp.take(jnp.take(A, row_idx, axis=0), col_idx, axis=1)  # (r, c)
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    return jnp.linalg.pinv(W.astype(dt), rtol=1e-6).astype(A.dtype)  # (c, r)
+
+
+def run(trials: int = 3, quick: bool = False) -> list:
+    rows = []
+    c = r = 20
+    eps, rho_est = 0.05, 2.0
+    shapes = [("powerlaw", 512, 512)] if quick else [
+        ("powerlaw", 1024, 1024),
+        ("powerlaw", 4096, 4096),
+        ("sparse", 4096, 4096),
+    ]
+    sizes = cur_sketch_sizes(c, r, eps=eps, rho=rho_est)
+    for ds, m, n in shapes:
+        key = jax.random.key(m + n)
+        A = powerlaw_matrix(key, m, n, 1.0) if ds == "powerlaw" else sparse_matrix(key, m, n, 0.002)
+        ci = select_columns(jax.random.key(1), A, c, "uniform").idx
+        ri = select_rows(jax.random.key(2), A, r, "uniform").idx
+        s_c, s_r = min(sizes["s_c"], m), min(sizes["s_r"], n)
+
+        res_exact = exact_cur(A, ci, ri)
+        base = float(jnp.linalg.norm(A - res_exact.C @ res_exact.U @ res_exact.R))
+        base = max(base, 1e-12)
+
+        methods = {
+            "exact": jax.jit(lambda k: exact_cur(A, ci, ri).U),
+            "fast-lev": jax.jit(
+                lambda k: fast_cur(k, A, col_idx=ci, row_idx=ri, sketch="leverage",
+                                   s_c=s_c, s_r=s_r).U
+            ),
+            "fast-gauss": jax.jit(
+                lambda k: fast_cur(k, A, col_idx=ci, row_idx=ri, sketch="gaussian",
+                                   s_c=s_c, s_r=s_r).U
+            ),
+            "cross": jax.jit(lambda k: _cross_core(A, ci, ri)),
+        }
+        us_by_method = {}
+        for name, fn in methods.items():
+            resids = []
+            for t in range(trials):
+                U = fn(jax.random.key(100 + t))
+                resids.append(float(jnp.linalg.norm(A - res_exact.C @ U @ res_exact.R)))
+            us = time_call(fn, jax.random.key(0))
+            us_by_method[name] = us
+            ratio = float(np.mean(resids)) / base
+            rows.append({
+                "name": f"cur/{ds}/{m}x{n}/{name}",
+                "us_per_call": round(us, 1),
+                "derived": f"resid_ratio={ratio:.4f};s_c={s_c};s_r={s_r};c={c};r={r}",
+                "_resid_ratio": ratio,
+            })
+        speedup = us_by_method["exact"] / max(us_by_method["fast-lev"], 1e-9)
+        rows.append({
+            "name": f"cur/{ds}/{m}x{n}/sketch_speedup",
+            "us_per_call": 0.0,
+            "derived": f"exact_over_fastlev={speedup:.2f}x"
+                       f"({'PASS' if (m < 4096 or speedup > 1.0) else 'FAIL'}@4k-criterion)",
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="single small shape, 1 trial (CI)")
+    ap.add_argument("--out-dir", default=None, help="where to write BENCH_cur_decomp.json")
+    args = ap.parse_args()
+    rows = run(trials=1 if args.smoke else 3, quick=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
+    path = write_bench_json("cur_decomp", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,11 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module subset")
     args = ap.parse_args()
 
-    from . import gmr_error, roofline, single_pass_svd, sketch_perf, spsd_approx
+    from . import cur_decomp, gmr_error, roofline, single_pass_svd, sketch_perf, spsd_approx
 
     modules = {
         "gmr_error": gmr_error,        # paper Fig. 1  (§6.1)
+        "cur_decomp": cur_decomp,      # paper §1 application 1 (repro/cur/)
         "spsd_approx": spsd_approx,    # paper Fig. 2 + Table 7 (§6.2)
         "single_pass_svd": single_pass_svd,  # paper Fig. 3 (§6.3)
         "sketch_perf": sketch_perf,    # kernel layer

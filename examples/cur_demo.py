@@ -1,0 +1,79 @@
+"""CUR decomposition via Fast GMR (paper §1 application 1) — three modes:
+
+1. one-shot: exact vs Algorithm-1 sketched core on a power-law matrix
+2. streaming: single-pass CUR over column panels of a matrix we never hold
+3. batched serving: a stack of per-user matrices in one dispatch
+
+  PYTHONPATH=src python examples/cur_demo.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.cur import (
+    batched_fast_cur,
+    cur_error_ratio,
+    cur_reconstruct,
+    cur_sketch_sizes,
+    exact_cur,
+    fast_cur,
+    select_columns,
+    select_rows,
+    streaming_cur_finalize,
+    streaming_cur_init,
+    streaming_cur_update,
+)
+from repro.data.synthetic import powerlaw_matrix
+
+# ---- 1. one-shot: sketched core vs oracle core -----------------------------
+m, n, c, r = 2048, 1536, 20, 20
+A = powerlaw_matrix(jax.random.key(0), m, n, 1.0)
+
+sel_c = select_columns(jax.random.key(1), A, c, "approx_leverage")
+sel_r = select_rows(jax.random.key(2), A, r, "approx_leverage")
+
+exact_fn = jax.jit(lambda: exact_cur(A, sel_c.idx, sel_r.idx))
+fast_fn = jax.jit(lambda k: fast_cur(k, A, col_idx=sel_c.idx, row_idx=sel_r.idx))
+res_exact, res_fast = exact_fn(), fast_fn(jax.random.key(3))  # compile warmup
+t0 = time.perf_counter()
+res_exact = jax.block_until_ready(exact_fn())
+t_exact = time.perf_counter() - t0
+t0 = time.perf_counter()
+res_fast = jax.block_until_ready(fast_fn(jax.random.key(3)))
+t_fast = time.perf_counter() - t0
+
+sizes = cur_sketch_sizes(c, r)
+base = float(jnp.linalg.norm(A - cur_reconstruct(res_exact)))
+fast = float(jnp.linalg.norm(A - cur_reconstruct(res_fast)))
+print(f"exact CUR  (U = C† A R†):          {t_exact*1e3:7.1f} ms   resid = {base:.4f}")
+print(f"fast  CUR  (Alg 1, s={sizes['s_c']}):         {t_fast*1e3:7.1f} ms   "
+      f"resid = {fast:.4f}  ({fast/base:.3f}x oracle)")
+print(f"error ratio (§6.1 metric):          {float(cur_error_ratio(A, res_fast)):+.4f}")
+
+# ---- 2. streaming: one pass over column panels -----------------------------
+panel = 256
+state = streaming_cur_init(jax.random.key(4), m, n, sel_c.idx, sel_r.idx, sketch="countsketch")
+for off in range(0, n, panel):  # the "stream": panels could be generated on demand
+    state = streaming_cur_update(state, A[:, off : off + panel])
+res_stream = streaming_cur_finalize(state)
+resid = float(jnp.linalg.norm(A - cur_reconstruct(res_stream)))
+mem = (m * c + r * n + state.M.size) * 4 / 1e6
+print(f"streaming CUR ({n//panel} panels, {mem:.1f} MB working set): resid = {resid:.4f}")
+
+# ---- 3. batched serving: many small matrices, one dispatch -----------------
+B, mb, nb = 32, 256, 192
+Ab = jax.vmap(lambda k: powerlaw_matrix(k, mb, nb, 1.0))(jax.random.split(jax.random.key(5), B))
+batched_fn = jax.jit(lambda k, a: batched_fast_cur(k, a, 12, 12, s_c=96, s_r=96))
+jax.block_until_ready(batched_fn(jax.random.key(6), Ab))  # compile warmup
+t0 = time.perf_counter()
+res_b = jax.block_until_ready(batched_fn(jax.random.key(6), Ab))
+t_b = time.perf_counter() - t0
+errs = jnp.linalg.norm(Ab - cur_reconstruct(res_b), axis=(1, 2)) / jnp.linalg.norm(Ab, axis=(1, 2))
+print(f"batched CUR: {B} matrices of {mb}x{nb} in {t_b*1e3:.1f} ms "
+      f"({t_b/B*1e6:.0f} us/matrix), rel err p50 = {float(jnp.median(errs)):.4f}")

@@ -9,6 +9,11 @@ Public surface:
 * spsd           — §4: Nyström / fast-SPSD (Wang'16b) / **Algorithm 2** / optimal core
 * svd            — §5: **Algorithm 3** streaming Fast SP-SVD + Tropp'17 baseline
 * leverage       — exact & sketched leverage scores
+
+The §1 CUR application lives in the sibling :mod:`repro.cur` subsystem
+(selection → fast core → streaming → batched serving); its headline
+symbols are re-exported here lazily so ``from repro.core import fast_cur``
+works without an import cycle.
 """
 
 from .sketching import (
@@ -43,6 +48,22 @@ from .svd import (
     svd_error_ratio,
 )
 
+_CUR_EXPORTS = (
+    "CURResult", "cur_error_ratio", "cur_reconstruct", "cur_relative_error",
+    "cur_sketch_sizes", "exact_cur", "fast_cur", "select_columns", "select_rows",
+    "streaming_cur_finalize", "streaming_cur_init", "streaming_cur_update",
+    "batched_fast_cur",
+)
+
+
+def __getattr__(name):  # PEP 562: lazy repro.cur re-export (cycle-free)
+    if name in _CUR_EXPORTS:
+        from .. import cur as _cur
+
+        return getattr(_cur, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "ComposedSketch", "CountSketch", "GaussianSketch", "OSNAPSketch", "RowSampling",
     "SRHTSketch", "draw_sketch", "fwht",
@@ -53,4 +74,5 @@ __all__ = [
     "rbf_kernel_oracle", "spsd_error_ratio",
     "fast_sp_svd", "practical_sp_svd", "sp_svd_finalize", "sp_svd_init", "sp_svd_sizes",
     "sp_svd_update", "svd_error_ratio",
+    *_CUR_EXPORTS,
 ]

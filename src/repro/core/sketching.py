@@ -51,6 +51,12 @@ def _register(cls, data: tuple, meta: tuple):
     return jax.tree_util.register_dataclass(cls, data_fields=list(data), meta_fields=list(meta))
 
 
+def _bcast_vec(v: jax.Array, ndim: int) -> jax.Array:
+    """Reshape a length-k vector to (k, 1, …, 1) for broadcasting against an
+    ndim-dimensional operand (3.10-safe stand-in for ``v[:, *([None]*(ndim-1))]``)."""
+    return v.reshape(v.shape[:1] + (1,) * (ndim - 1))
+
+
 # ---------------------------------------------------------------------------
 # Gaussian projection
 # ---------------------------------------------------------------------------
@@ -142,7 +148,7 @@ class SRHTSketch:
     def apply(self, A: jax.Array) -> jax.Array:
         m = A.shape[0]
         pad = self.m_pad - m
-        x = A * self.signs[:m, *([None] * (A.ndim - 1))]
+        x = A * _bcast_vec(self.signs[:m], A.ndim)
         if pad:
             x = jnp.concatenate([x, jnp.zeros((pad, *A.shape[1:]), A.dtype)], axis=0)
         x = fwht(x) * (1.0 / np.sqrt(self.s))
@@ -192,7 +198,7 @@ class CountSketch:
 
     def apply(self, A: jax.Array) -> jax.Array:
         m = A.shape[0]
-        signed = A * self.signs[:m, *([None] * (A.ndim - 1))]
+        signed = A * _bcast_vec(self.signs[:m], A.ndim)
         return jax.ops.segment_sum(signed, self.hashes[:m], num_segments=self.s)
 
     def apply_t(self, A: jax.Array) -> jax.Array:
@@ -247,7 +253,7 @@ class OSNAPSketch:
         m = A.shape[0]
 
         def one(h, sg):
-            signed = A * sg[:m, *([None] * (A.ndim - 1))]
+            signed = A * _bcast_vec(sg[:m], A.ndim)
             return jax.ops.segment_sum(signed, h[:m], num_segments=self.s)
 
         return jnp.sum(jax.vmap(one)(self.hashes, self.signs), axis=0)
@@ -302,7 +308,7 @@ class RowSampling:
 
     def apply(self, A: jax.Array) -> jax.Array:
         rows = jnp.take(A, self.idx, axis=0)
-        return rows * self.scale[:, *([None] * (A.ndim - 1))]
+        return rows * _bcast_vec(self.scale, A.ndim)
 
     def apply_t(self, A: jax.Array) -> jax.Array:
         return jnp.take(A, self.idx, axis=1) * self.scale[None, :]

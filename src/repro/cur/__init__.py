@@ -1,0 +1,39 @@
+"""CUR decomposition on top of Fast GMR (paper §1's first application).
+
+Layered subsystem:
+
+* :mod:`repro.cur.selection` — which columns/rows to keep
+  (uniform / leverage / sketched-leverage / pivoted-QR policies).
+* :mod:`repro.cur.cur`       — :func:`exact_cur` oracle and the Algorithm-1
+  :func:`fast_cur` with Table-2 sketch-size defaults + ρ-branch selection.
+* :mod:`repro.cur.streaming` — single-pass CUR over L-column panels (the
+  Algorithm-3 streaming contract) for matrices that never fit in memory.
+* :mod:`repro.cur.batched`   — vmapped CUR of matrix stacks for serving,
+  fused-Pallas-kernel core product.
+"""
+
+from .selection import SELECTION_POLICIES, Selection, select_columns, select_rows
+from .cur import (
+    CURResult,
+    cur_error_ratio,
+    cur_reconstruct,
+    cur_relative_error,
+    cur_sketch_sizes,
+    exact_cur,
+    fast_cur,
+)
+from .streaming import (
+    StreamingCURState,
+    streaming_cur_finalize,
+    streaming_cur_init,
+    streaming_cur_update,
+)
+from .batched import batched_fast_cur, draw_shared_sketches
+
+__all__ = [
+    "SELECTION_POLICIES", "Selection", "select_columns", "select_rows",
+    "CURResult", "cur_error_ratio", "cur_reconstruct", "cur_relative_error",
+    "cur_sketch_sizes", "exact_cur", "fast_cur",
+    "StreamingCURState", "streaming_cur_finalize", "streaming_cur_init", "streaming_cur_update",
+    "batched_fast_cur", "draw_shared_sketches",
+]

@@ -1,0 +1,128 @@
+"""Column/row selection policies for CUR decomposition.
+
+CUR quality is decided first by *which* columns/rows are kept, then by the
+core matrix. Every policy sits behind one API:
+
+    ``select_columns(key, A, c, policy)`` → :class:`Selection` (idx, probs)
+
+Policies (Wang & Zhang 2015-style taxonomy):
+
+* ``uniform``          — uniform sampling without replacement, O(1) per draw.
+* ``leverage``         — exact rank-k *subspace* leverage scores
+                         ``ℓ_j = ||V_k[j, :]||²`` from the top-k right
+                         singular subspace (Drineas & Mahoney CUR; k
+                         defaults to c — full-rank leverage of a square/tall
+                         slice is uniform and useless).
+* ``approx_leverage``  — the same scores from a row-sketched ``S·A``
+                         (CountSketch, O(nnz(A)) + O(s²n) small SVD) — the
+                         large-scale default, Drineas et al. 2012 style.
+* ``pivoted_qr``       — deterministic greedy pivoted-QR baseline: repeatedly
+                         pick the column with the largest residual norm and
+                         deflate (Golub-Businger pivoting, O(m n c)).
+
+``probs`` is the sampling distribution actually used (uniform vector for
+``uniform``; None for the deterministic ``pivoted_qr``) so callers can feed
+the same distribution into leverage-sampling core sketches (Table 2/3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sketching import CountSketch
+
+__all__ = ["Selection", "SELECTION_POLICIES", "select_columns", "select_rows"]
+
+SELECTION_POLICIES = ("uniform", "leverage", "approx_leverage", "pivoted_qr")
+
+
+class Selection(NamedTuple):
+    """Chosen indices plus the sampling distribution that produced them."""
+
+    idx: jax.Array  # (c,) int32 indices into the selected axis
+    probs: Optional[jax.Array]  # (n,) distribution used, or None (deterministic)
+
+
+def _pivoted_qr_idx(A: jax.Array, c: int) -> jax.Array:
+    """Greedy column-pivoted QR: argmax residual column norm, Gram-Schmidt deflate."""
+    dt = jnp.promote_types(A.dtype, jnp.float32)
+    res = A.astype(dt)
+    taken = jnp.zeros((A.shape[1],), bool)
+    picked = []
+    for _ in range(c):
+        # mask already-picked columns: deflation leaves fp-noise residuals
+        # that argmax could otherwise re-select past the numerical rank
+        norms = jnp.where(taken, -jnp.inf, jnp.sum(res * res, axis=0))
+        j = jnp.argmax(norms)
+        picked.append(j)
+        taken = taken.at[j].set(True)
+        q = res[:, j] / jnp.maximum(jnp.sqrt(norms[j]), jnp.finfo(dt).tiny)
+        res = res - q[:, None] * (q @ res)[None, :]
+    return jnp.stack(picked).astype(jnp.int32)
+
+
+def _subspace_leverage(Vt: jax.Array, k: int) -> jax.Array:
+    """Column scores ``ℓ_j = ||V_k[j, :]||²`` given rows-of-Vᵀ; sums to ≤ k."""
+    return jnp.sum(Vt[:k] * Vt[:k], axis=0)
+
+
+def select_columns(
+    key,
+    A: jax.Array,
+    c: int,
+    policy: str = "uniform",
+    *,
+    k: Optional[int] = None,
+    probs: Optional[jax.Array] = None,
+) -> Selection:
+    """Pick ``c`` column indices of ``A`` under the given policy.
+
+    ``k`` is the target subspace rank for the leverage policies (default
+    ``c``). ``probs`` overrides the policy's distribution entirely (e.g.
+    precomputed scores for the streaming path, where ``A`` is never
+    materialized).
+    """
+    m, n = A.shape
+    if not 0 < c <= n:
+        raise ValueError(f"need 0 < c <= n, got c={c}, n={n}")
+    if policy == "pivoted_qr":
+        return Selection(idx=_pivoted_qr_idx(A, c), probs=None)
+
+    if probs is None:
+        k = min(k or c, m, n)
+        dt = jnp.promote_types(A.dtype, jnp.float32)
+        if policy == "uniform":
+            probs = jnp.full((n,), 1.0 / n, jnp.float32)
+        elif policy == "leverage":
+            Vt = jnp.linalg.svd(A.astype(dt), full_matrices=False)[2]
+            lev = _subspace_leverage(Vt, k)
+            probs = lev / jnp.sum(lev)
+        elif policy == "approx_leverage":
+            key, sub = jax.random.split(key)
+            s = min(m, max(4 * k, k + 8))
+            S = CountSketch.draw(sub, s, m, dtype=A.dtype)
+            Vt = jnp.linalg.svd(S.apply(A).astype(dt), full_matrices=False)[2]
+            lev = _subspace_leverage(Vt, k)
+            probs = lev / jnp.sum(lev)
+        else:
+            raise ValueError(f"unknown policy {policy!r}; expected one of {SELECTION_POLICIES}")
+    else:
+        probs = probs / jnp.sum(probs)
+    idx = jax.random.choice(key, n, (c,), replace=False, p=probs).astype(jnp.int32)
+    return Selection(idx=idx, probs=probs)
+
+
+def select_rows(
+    key,
+    A: jax.Array,
+    r: int,
+    policy: str = "uniform",
+    *,
+    k: Optional[int] = None,
+    probs: Optional[jax.Array] = None,
+) -> Selection:
+    """Pick ``r`` row indices of ``A`` — :func:`select_columns` on ``Aᵀ``."""
+    return select_columns(key, A.T, r, policy, k=k, probs=probs)

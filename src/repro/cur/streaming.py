@@ -1,0 +1,130 @@
+"""Single-pass streaming CUR over L-column panels.
+
+Same streaming contract as ``repro.core.svd.sp_svd_update`` (Algorithm 3):
+``A`` arrives as column panels ``A_L`` and is never retained. Per panel:
+
+* ``C``: the panel's selected columns land in their slots (selected column
+  j with ``offset ≤ col_idx[j] < offset+L`` is copied out of the panel);
+* ``R[:, cols] = A_L[row_idx, :]`` — selected rows accumulate left→right;
+* ``M += (S_C A_L) · S_R[:, cols]ᵀ`` via the ``cols()`` sketch-window
+  primitive of ``repro.core.sketching`` (column-sliceable families only:
+  gaussian / countsketch / osnap).
+
+Memory: C (m·c) + R (r·n) + M (s_c·s_r) — the factors themselves plus a
+constant-size core sketch; ``finalize`` then runs the Fast-GMR core solve.
+Because ``Σ_L S_C A_L S_R[:,cols]ᵀ = S_C A S_Rᵀ`` exactly, the finalized
+factors match one-shot :func:`repro.cur.fast_cur` on identical sketches up
+to fp32 summation order (tested in ``tests/test_cur.py``).
+
+Selection indices must be fixed before the pass (uniform, or scores from a
+prior epoch / sketched estimate) — the single-pass constraint; adaptive
+in-stream column addition is a ROADMAP open item.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gmr import fast_gmr_core
+from ..core.sketching import draw_sketch
+from .cur import CURResult, cur_sketch_sizes
+
+__all__ = ["StreamingCURState", "streaming_cur_init", "streaming_cur_update", "streaming_cur_finalize"]
+
+
+@dataclasses.dataclass
+class StreamingCURState:
+    """Streaming accumulators + the shared sketching operators."""
+
+    C: jax.Array  # (m, c) — filled as selected columns stream past
+    R: jax.Array  # (r, n) — filled panel-by-panel
+    M: jax.Array  # (s_c, s_r) — running S_C A S_Rᵀ
+    offset: jax.Array  # columns consumed so far
+    col_idx: jax.Array  # (c,)
+    row_idx: jax.Array  # (r,)
+    S_C: object  # column-sliceable sketch, (s_c, m)
+    S_R: object  # column-sliceable sketch, (s_r, n)
+
+
+jax.tree_util.register_dataclass(
+    StreamingCURState,
+    data_fields=["C", "R", "M", "offset", "col_idx", "row_idx", "S_C", "S_R"],
+    meta_fields=[],
+)
+
+
+def streaming_cur_init(
+    key,
+    m: int,
+    n: int,
+    col_idx: jax.Array,
+    row_idx: jax.Array,
+    *,
+    s_c: Optional[int] = None,
+    s_r: Optional[int] = None,
+    eps: float = 0.05,
+    rho_est: float = 2.0,
+    sketch: str = "countsketch",
+    osnap_p: int = 2,
+    dtype=jnp.float32,
+    sketches=None,
+) -> StreamingCURState:
+    """Draw column-sliceable core sketches and allocate zero accumulators."""
+    col_idx = jnp.asarray(col_idx, jnp.int32)
+    row_idx = jnp.asarray(row_idx, jnp.int32)
+    c, r = col_idx.shape[0], row_idx.shape[0]
+    if sketches is None:
+        sizes = cur_sketch_sizes(c, r, eps=eps, rho=rho_est)
+        s_c = min(s_c or sizes["s_c"], m)
+        s_r = min(s_r or sizes["s_r"], n)
+        k_sc, k_sr = jax.random.split(key)
+        S_C = draw_sketch(k_sc, sketch, s_c, m, p=osnap_p, dtype=dtype)
+        S_R = draw_sketch(k_sr, sketch, s_r, n, p=osnap_p, dtype=dtype)
+    else:
+        S_C, S_R = sketches
+        s_c, s_r = S_C.s, S_R.s
+    S_R.cols(0, 1)  # fail fast on non-sliceable families (srht / sampling)
+    return StreamingCURState(
+        C=jnp.zeros((m, c), dtype),
+        R=jnp.zeros((r, n), dtype),
+        M=jnp.zeros((s_c, s_r), dtype),
+        offset=jnp.zeros((), jnp.int32),
+        col_idx=col_idx,
+        row_idx=row_idx,
+        S_C=S_C,
+        S_R=S_R,
+    )
+
+
+def streaming_cur_update(state: StreamingCURState, A_L: jax.Array) -> StreamingCURState:
+    """Consume one L-column panel. jit-compatible (L static per panel width)."""
+    L = A_L.shape[1]
+    off = state.offset
+
+    # selected columns that live in this panel → their C slots
+    rel = state.col_idx - off
+    in_panel = (rel >= 0) & (rel < L)
+    picked = jnp.take(A_L, jnp.clip(rel, 0, L - 1), axis=1)  # (m, c)
+    C = jnp.where(in_panel[None, :], picked.astype(state.C.dtype), state.C)
+
+    # selected rows of the panel → R[:, off:off+L]
+    r_block = jnp.take(A_L, state.row_idx, axis=0).astype(state.R.dtype)  # (r, L)
+    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_block, off, axis=1)
+
+    # M += (S_C A_L) · S_R[:, cols]ᵀ
+    sc_a = state.S_C.apply(A_L)  # (s_c, L)
+    M = state.M + state.S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
+
+    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L)
+
+
+def streaming_cur_finalize(state: StreamingCURState) -> CURResult:
+    """Fast-GMR core solve on the accumulated pieces (Algorithm 1 step 11)."""
+    ScC = state.S_C.apply(state.C)  # (s_c, c)
+    RSr = state.S_R.apply_t(state.R)  # (r, s_r)
+    U = fast_gmr_core(ScC, state.M, RSr)
+    return CURResult(C=state.C, U=U, R=state.R, col_idx=state.col_idx, row_idx=state.row_idx)

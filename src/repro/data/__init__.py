@@ -1,2 +1,8 @@
-"""Deterministic restartable data pipeline."""
-from .synthetic import DataConfig, SyntheticLM
+"""Deterministic restartable data pipeline + synthetic test matrices."""
+from .synthetic import (
+    DataConfig,
+    SyntheticLM,
+    lowrank_plus_noise,
+    powerlaw_matrix,
+    sparse_matrix,
+)

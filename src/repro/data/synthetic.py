@@ -1,4 +1,10 @@
-"""Deterministic, shardable, restartable synthetic token pipeline.
+"""Deterministic synthetic data: test matrices + shardable token pipeline.
+
+Matrix generators (:func:`powerlaw_matrix`, :func:`sparse_matrix`,
+:func:`lowrank_plus_noise`) are the offline substitutions for the paper's
+LIBSVM datasets (matched spectral / sparsity profiles, DESIGN.md §8) and
+the ground truth for the CUR / GMR / SVD test-and-benchmark suites —
+``benchmarks/common.py`` re-exports them.
 
 Stateless-by-construction: ``batch_at(step)`` derives every batch from
 ``fold_in(seed, step)``, so restart-from-checkpoint only needs the step
@@ -18,6 +24,41 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Test matrices (paper §6 dataset substitutions)
+# ---------------------------------------------------------------------------
+
+
+def powerlaw_matrix(key, m: int, n: int, decay: float = 1.0, dtype=jnp.float32):
+    """Dense matrix with σ_i ∝ i^-decay (the spectral profile of the paper's
+    dense LIBSVM datasets)."""
+    k1, k2 = jax.random.split(key)
+    r = min(m, n)
+    U, _ = jnp.linalg.qr(jax.random.normal(k1, (m, r), dtype))
+    V, _ = jnp.linalg.qr(jax.random.normal(k2, (n, r), dtype))
+    sv = jnp.arange(1, r + 1, dtype=dtype) ** (-decay)
+    return (U * sv[None, :]) @ V.T
+
+
+def sparse_matrix(key, m: int, n: int, density: float = 0.002, dtype=jnp.float32):
+    """Sparse-profile matrix (rcv1/news20 substitution): Bernoulli mask × normal."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (m, n))
+    vals = jax.random.normal(k2, (m, n), dtype)
+    return jnp.where(mask, vals, 0.0)
+
+
+def lowrank_plus_noise(key, m: int, n: int, rank: int = 10, snr: float = 10.0, dtype=jnp.float32):
+    """Exactly-rank-k signal plus white noise at the given signal-to-noise
+    ratio — the regime where CUR / randomized SVD guarantees are sharpest."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    L = jax.random.normal(k1, (m, rank), dtype)
+    Rf = jax.random.normal(k2, (rank, n), dtype)
+    signal = (L @ Rf) / np.sqrt(rank)
+    noise = jax.random.normal(k3, (m, n), dtype)
+    return signal + (jnp.linalg.norm(signal) / (snr * jnp.linalg.norm(noise))) * noise
 
 
 @dataclasses.dataclass(frozen=True)

@@ -43,8 +43,11 @@ class LowRankKV:
 
 
 def _sizes(d: int, kc: KVCompressionConfig) -> dict:
+    # c is capped by the source dim d (C spans at most R^d), but the GMR
+    # sketches must stay strictly larger than c to be subspace embeddings —
+    # s_c = c (square sketch) destroys the core solve, so never clamp them.
     c = min(d, kc.oversample * kc.rank)
-    return dict(c=c, r=c, c0=min(d, 2 * c), r0=2 * c, s_c=min(d, 3 * c), s_r=3 * c)
+    return dict(c=c, r=c, c0=2 * c, r0=2 * c, s_c=3 * c, s_r=3 * c)
 
 
 def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
@@ -54,7 +57,10 @@ def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV
     """
     S, d = hist.shape
     sizes = _sizes(d, kc)
-    state = sp_svd_init(key, d, S, sizes=sizes, dtype=jnp.float32)
+    # osnap_p=4: at KV head dims the inner S_C/S_R must embed all of R^d;
+    # p=2 leaves ~10% odds of a double hash collision annihilating a
+    # direction (cond(S_C U_C) ~ 1e7 → 0.1+ reconstruction error).
+    state = sp_svd_init(key, d, S, sizes=sizes, dtype=jnp.float32, osnap_p=4)
     panel = min(kc.panel, S)
     n_full = S // panel
     for i in range(n_full):

@@ -21,7 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import ParallelismRules, batch_pspec, param_pspecs
+from repro.distributed.sharding import (
+    ParallelismRules,
+    axis_size_compat,
+    batch_pspec,
+    param_pspecs,
+    shard_map_compat,
+)
 from repro.models import train_logits
 from repro.models.config import ModelConfig
 
@@ -155,7 +161,7 @@ def make_compressed_train_step(
         params, opt, opt_metrics = adamw_update(gbar, opt, params, oc)
         nw = 1
         for a in dp:
-            nw *= jax.lax.axis_size(a)
+            nw *= axis_size_compat(a)
         # psum local metrics so every output except `err` is dp-invariant
         # (check_vma=True verifies this; partial-manual + check_vma=False is
         # broken in jax 0.8.2 — see DESIGN.md §Environment)
@@ -174,7 +180,7 @@ def make_compressed_train_step(
         bspec = {k: P(dp, *([None] * (v.ndim - 1))) for k, v in batch.items()}
         mspec = P()
 
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             inner,
             mesh=mesh,
             in_specs=(pspec, ospec, espec, bspec, P()),

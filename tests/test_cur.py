@@ -1,0 +1,208 @@
+"""CUR subsystem (repro/cur/): selection, fast core, streaming, batched."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cur import (
+    batched_fast_cur,
+    cur_error_ratio,
+    cur_reconstruct,
+    cur_relative_error,
+    cur_sketch_sizes,
+    draw_shared_sketches,
+    exact_cur,
+    fast_cur,
+    select_columns,
+    select_rows,
+    streaming_cur_finalize,
+    streaming_cur_init,
+    streaming_cur_update,
+)
+from repro.data.synthetic import lowrank_plus_noise, powerlaw_matrix
+
+
+@pytest.fixture(scope="module")
+def A():
+    return powerlaw_matrix(jax.random.key(0), 400, 300, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["uniform", "leverage", "approx_leverage"])
+def test_selection_probabilities_sane(A, policy):
+    sel = select_columns(jax.random.key(1), A, 12, policy)
+    assert sel.idx.shape == (12,)
+    assert len(np.unique(np.asarray(sel.idx))) == 12  # without replacement
+    assert np.all((np.asarray(sel.idx) >= 0) & (np.asarray(sel.idx) < A.shape[1]))
+    probs = np.asarray(sel.probs)
+    assert probs.shape == (A.shape[1],)
+    assert np.all(probs >= 0)
+    np.testing.assert_allclose(probs.sum(), 1.0, rtol=1e-5)
+
+
+def test_pivoted_qr_picks_dominant_columns():
+    """Greedy QR must pick the two orthogonal heavy columns first."""
+    A = jnp.zeros((50, 40)).at[:, 7].set(10.0 * jnp.ones(50))
+    A = A.at[:25, 13].set(8.0)
+    A = A + 0.01 * jax.random.normal(jax.random.key(2), A.shape)
+    sel = select_columns(jax.random.key(0), A, 2, "pivoted_qr")
+    assert sel.probs is None
+    assert set(np.asarray(sel.idx).tolist()) == {7, 13}
+
+
+def test_leverage_concentrates_on_lowrank_support():
+    """Rank-k leverage scores upweight the columns carrying the signal."""
+    A = lowrank_plus_noise(jax.random.key(3), 200, 150, rank=5, snr=50.0)
+    A = A.at[:, 60:].multiply(0.01)  # kill signal outside the first 60 columns
+    sel = select_columns(jax.random.key(4), A, 10, "leverage", k=5)
+    probs = np.asarray(sel.probs)
+    assert probs[:60].sum() > 0.9
+
+
+def test_select_rows_matches_transposed_columns(A):
+    s_r = select_rows(jax.random.key(5), A, 9, "leverage")
+    s_c = select_columns(jax.random.key(5), A.T, 9, "leverage")
+    np.testing.assert_array_equal(s_r.idx, s_c.idx)
+
+
+# ---------------------------------------------------------------------------
+# sketch sizes (Table 2 + ρ branch)
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_sizes_branch_selection():
+    small_rho = cur_sketch_sizes(20, 20, eps=0.05, rho=0.5)
+    big_rho = cur_sketch_sizes(20, 20, eps=0.05, rho=10.0)
+    assert small_rho["s_c"] > big_rho["s_c"]  # 1/(ε ρ²) branch dominates at small ρ
+    # past the ε^{-1/4} crossover the ε^{-1/2} branch is active and ρ-independent
+    assert big_rho["s_c"] == cur_sketch_sizes(20, 20, eps=0.05, rho=100.0)["s_c"]
+    assert cur_sketch_sizes(20, 20, eps=0.01)["s_c"] > cur_sketch_sizes(20, 20, eps=0.1)["s_c"]
+
+
+# ---------------------------------------------------------------------------
+# exact vs fast core
+# ---------------------------------------------------------------------------
+
+
+def test_fast_cur_within_tolerance_of_exact(A):
+    """Acceptance: ≤1.05× the Frobenius error of exact CUR (same C, R) at
+    Table-2 default sketch sizes."""
+    ratios = []
+    for t in range(3):
+        res_e = exact_cur(A, key=jax.random.key(20 + t), c=15, r=15)
+        res_f = fast_cur(
+            jax.random.key(40 + t), A, col_idx=res_e.col_idx, row_idx=res_e.row_idx
+        )
+        num = float(jnp.linalg.norm(A - cur_reconstruct(res_f)))
+        den = float(jnp.linalg.norm(A - cur_reconstruct(res_e)))
+        ratios.append(num / den)
+    assert np.mean(ratios) <= 1.05, ratios
+    assert np.max(ratios) <= 1.10, ratios
+
+
+@pytest.mark.parametrize("sketch", ["gaussian", "countsketch", "leverage"])
+def test_fast_cur_sketch_families(A, sketch):
+    res = fast_cur(jax.random.key(6), A, 15, 15, sketch=sketch)
+    assert float(cur_error_ratio(A, res)) < 0.25
+    assert float(cur_relative_error(A, res)) < 1.0
+
+
+def test_error_ratio_nonnegative(A):
+    """exact core is the minimizer: any sketched core can only do worse."""
+    res = fast_cur(jax.random.key(7), A, 12, 12, s_c=60, s_r=60)
+    assert float(cur_error_ratio(A, res)) > -1e-3
+
+
+def test_cur_factors_are_actual_columns_and_rows(A):
+    res = fast_cur(jax.random.key(8), A, 10, 14)
+    np.testing.assert_array_equal(res.C, jnp.take(A, res.col_idx, axis=1))
+    np.testing.assert_array_equal(res.R, jnp.take(A, res.row_idx, axis=0))
+    assert res.U.shape == (10, 14)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_matches_oneshot(A):
+    """Panel-streamed CUR == one-shot fast_cur on identical sketches."""
+    m, n = A.shape
+    ci = select_columns(jax.random.key(9), A, 12, "uniform").idx
+    ri = select_rows(jax.random.key(10), A, 12, "uniform").idx
+    state = streaming_cur_init(jax.random.key(11), m, n, ci, ri, sketch="countsketch")
+    sketches = (state.S_C, state.S_R)
+    for off in range(0, n, 64):
+        state = streaming_cur_update(state, A[:, off : off + min(64, n - off)])
+    res_s = streaming_cur_finalize(state)
+    res_o = fast_cur(jax.random.key(0), A, col_idx=ci, row_idx=ri, sketches=sketches)
+    np.testing.assert_array_equal(res_s.C, res_o.C)
+    np.testing.assert_array_equal(res_s.R, res_o.R)
+    np.testing.assert_allclose(res_s.U, res_o.U, atol=2e-3)
+
+
+def test_streaming_panel_size_invariance(A):
+    """Different L give the same factors (same sketches) — jit'd update."""
+    m, n = A.shape
+    ci = select_columns(jax.random.key(12), A, 10, "uniform").idx
+    ri = select_rows(jax.random.key(13), A, 10, "uniform").idx
+    outs = []
+    for panel in (50, 150):
+        state = streaming_cur_init(jax.random.key(14), m, n, ci, ri, sketch="osnap")
+        step = jax.jit(streaming_cur_update)
+        for off in range(0, n, panel):
+            state = step(state, A[:, off : off + panel])  # n divisible by 50/150
+        res = streaming_cur_finalize(state)
+        outs.append(cur_reconstruct(res))
+    np.testing.assert_allclose(outs[0], outs[1], atol=5e-3)
+
+
+def test_streaming_rejects_nonsliceable_sketch(A):
+    ci = jnp.arange(5)
+    with pytest.raises(NotImplementedError):
+        streaming_cur_init(jax.random.key(15), *A.shape, ci, ci, sketch="srht")
+
+
+# ---------------------------------------------------------------------------
+# batched
+# ---------------------------------------------------------------------------
+
+
+def test_batched_matches_loop():
+    """vmapped batched CUR ≡ per-item fast_cur with the same shared sketches."""
+    B, m, n = 3, 96, 80
+    Ab = jnp.stack([powerlaw_matrix(jax.random.key(30 + i), m, n, 1.0) for i in range(B)])
+    sketches = draw_shared_sketches(jax.random.key(16), m, n, 48, 48)
+    res = batched_fast_cur(jax.random.key(17), Ab, 8, 8, sketches=sketches, use_kernel=False)
+    assert res.C.shape == (B, m, 8) and res.U.shape == (B, 8, 8) and res.R.shape == (B, 8, n)
+    for b in range(B):
+        item = fast_cur(
+            jax.random.key(0), Ab[b],
+            col_idx=res.col_idx[b], row_idx=res.row_idx[b], sketches=sketches,
+        )
+        np.testing.assert_allclose(res.U[b], item.U, atol=1e-4)
+
+
+def test_batched_kernel_path_matches_einsum():
+    """The fused Pallas twoside_sketch route gives the same cores."""
+    B, m, n = 2, 64, 64
+    Ab = jnp.stack([powerlaw_matrix(jax.random.key(40 + i), m, n, 1.0) for i in range(B)])
+    sketches = draw_shared_sketches(jax.random.key(18), m, n, 32, 32)
+    kw = dict(sketches=sketches)
+    res_k = batched_fast_cur(jax.random.key(19), Ab, 6, 6, use_kernel=True, **kw)
+    res_e = batched_fast_cur(jax.random.key(19), Ab, 6, 6, use_kernel=False, **kw)
+    np.testing.assert_allclose(res_k.U, res_e.U, atol=1e-4)
+    np.testing.assert_array_equal(res_k.col_idx, res_e.col_idx)
+
+
+def test_batched_is_jittable():
+    B, m, n = 2, 48, 40
+    Ab = jnp.stack([powerlaw_matrix(jax.random.key(50 + i), m, n, 1.0) for i in range(B)])
+    fn = jax.jit(lambda k, a: batched_fast_cur(k, a, 6, 6, s_c=24, s_r=24, use_kernel=False).U)
+    U = fn(jax.random.key(20), Ab)
+    assert U.shape == (B, 6, 6) and bool(jnp.all(jnp.isfinite(U)))
