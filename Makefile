@@ -1,17 +1,22 @@
-# Convenience targets mirroring CI. Tier-1 verify == `make test`.
+# Convenience targets mirroring CI. Tier-1 verify == `make test`
+# (the default lane; `slow`-marked sweeps run via `make test-slow`).
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast smoke bench
+.PHONY: test test-slow test-all smoke bench
 
-test:
+test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
 
-test-fast:  ## skip the slow multi-device subprocess scenarios
-	$(PY) -m pytest -x -q -m "not slow"
+test-slow:  ## heavy sweeps + multi-device subprocess scenarios
+	$(PY) -m pytest -x -q -m slow
 
-smoke:  ## quick CUR benchmark (CI artifact check)
+test-all:  ## both lanes
+	$(PY) -m pytest -x -q -m "slow or not slow"
+
+smoke:  ## quick benchmark artifacts (CI)
 	$(PY) -m benchmarks.cur_decomp --smoke
+	$(PY) -m benchmarks.stream_bench --smoke
 
 bench:  ## full benchmark harness, CSV on stdout
 	$(PY) -m benchmarks.run

@@ -13,7 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.synthetic import lowrank_plus_noise, powerlaw_matrix, sparse_matrix  # noqa: F401 — re-export
+from repro.data.synthetic import (  # noqa: F401 — re-export
+    lowrank_plus_noise,
+    powerlaw_matrix,
+    sparse_matrix,
+    spiked_decay_matrix,
+)
 
 
 def write_bench_json(module: str, rows: list, meta: dict | None = None, out_dir: str | None = None) -> str:

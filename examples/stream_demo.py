@@ -1,0 +1,79 @@
+"""Unified panel-streaming engine (repro/stream/) — three modes:
+
+1. one engine, two applications: SP-SVD and streaming CUR share the panel
+   accumulator contract (and one jitted step)
+2. DP-sharded ingestion: the column stream split over simulated workers,
+   merged exactly at finalize
+3. adaptive column admission: streaming CUR that discovers heavy columns
+   mid-stream instead of fixing indices before the pass
+
+  PYTHONPATH=src python examples/stream_demo.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svd import sp_svd_finalize, sp_svd_init, svd_error_ratio
+from repro.cur import cur_relative_error, select_rows, streaming_cur_finalize, streaming_cur_init
+from repro.data.synthetic import powerlaw_matrix
+from repro.stream import (
+    adaptive_cur_finalize,
+    adaptive_cur_init,
+    simulate_sharded_stream,
+    stream_panels,
+)
+
+m, n, panel = 1536, 1200, 256
+A = powerlaw_matrix(jax.random.key(0), m, n, 1.0)
+
+# ---- 1. one engine, two applications ---------------------------------------
+sizes = dict(c=40, r=40, c0=120, r0=120, s_c=120, s_r=120)
+t0 = time.perf_counter()
+st = stream_panels(sp_svd_init(jax.random.key(1), m, n, sizes=sizes, panel=panel), A, panel)
+U, S, V = sp_svd_finalize(st)
+t_svd = time.perf_counter() - t0
+print(f"SP-SVD   : {n // panel + 1} panels in {t_svd*1e3:6.1f} ms, "
+      f"err ratio (k=10) = {float(svd_error_ratio(A, U, S, V, 10)):+.4f}")
+
+ci = jax.random.choice(jax.random.key(2), n, (20,), replace=False)
+ri = select_rows(jax.random.key(3), A, 20, "uniform").idx
+t0 = time.perf_counter()
+stc = streaming_cur_init(jax.random.key(4), m, n, ci, ri, sketch="countsketch", panel=panel)
+res = streaming_cur_finalize(stream_panels(stc, A, panel))
+t_cur = time.perf_counter() - t0
+print(f"CUR      : same panel loop in {t_cur*1e3:6.1f} ms, "
+      f"rel err = {float(cur_relative_error(A, res)):.4f}")
+
+# ---- 2. DP-sharded ingestion ------------------------------------------------
+single = stream_panels(sp_svd_init(jax.random.key(1), m, n, sizes=sizes, panel=panel), A, panel)
+for W in (2, 4):
+    shard = simulate_sharded_stream(
+        sp_svd_init(jax.random.key(1), m, n, sizes=sizes, panel=panel), A, panel, W
+    )
+    delta = float(jnp.max(jnp.abs(shard.M - single.M)))
+    print(f"DP x{W}    : sharded panel stream merged exactly (max |ΔM| = {delta:.2e})")
+
+# ---- 3. adaptive column admission -------------------------------------------
+B = 0.05 * powerlaw_matrix(jax.random.key(5), m, n, 1.5)
+spikes = jax.random.choice(jax.random.key(6), n, (8,), replace=False)
+B = B.at[:, spikes].add(6.0 * jax.random.normal(jax.random.key(7), (m, 8)))
+
+sta = adaptive_cur_init(jax.random.key(8), m, n, 12, ri, sketch="countsketch",
+                        panel=panel, panel_cap=3)
+res_a = adaptive_cur_finalize(stream_panels(sta, B, panel))
+found = sorted(set(np.asarray(spikes).tolist()) & set(np.asarray(res_a.col_idx).tolist()))
+
+cu = jax.random.choice(jax.random.key(9), n, (12,), replace=False)
+stu = streaming_cur_init(jax.random.key(10), m, n, cu, ri, sketch="countsketch", panel=panel)
+res_u = streaming_cur_finalize(stream_panels(stu, B, panel))
+
+print(f"adaptive : admitted {len(found)}/8 planted spikes mid-stream, "
+      f"rel err = {float(cur_relative_error(B, res_a)):.4f} "
+      f"vs fixed-uniform {float(cur_relative_error(B, res_u)):.4f} at equal c")

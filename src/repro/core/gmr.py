@@ -34,10 +34,16 @@ def _solve_least_squares(B: jax.Array, Y: jax.Array) -> jax.Array:
     """argmin_X ||B X − Y||_F for tall ``B`` via QR (fp32 accumulate)."""
     dt = jnp.promote_types(B.dtype, jnp.float32)
     Q, Rf = jnp.linalg.qr(B.astype(dt))
-    # Solve R X = Qᵀ Y. Guard rank deficiency with a tiny Tikhonov floor on R's diagonal.
+    # Solve R X = Qᵀ Y. Guard rank deficiency with a sign-preserving absolute
+    # floor on R's diagonal: the relative floor alone is 0 for an all-zero
+    # operand (CountSketch-collision-wiped blocks, unfilled streaming slots),
+    # which would leave zero pivots → division by zero → NaN core. The
+    # absolute fallback keeps 1/floor finite in fp32 even against O(1) RHS.
+    finfo = jnp.finfo(dt)
     d = jnp.diagonal(Rf)
-    eps = jnp.asarray(jnp.finfo(dt).eps, dt) * jnp.max(jnp.abs(d)) * Rf.shape[0]
-    safe = jnp.where(jnp.abs(d) > eps, d, jnp.where(d >= 0, eps, -eps) + (d == 0) * eps)
+    rel = jnp.asarray(finfo.eps, dt) * jnp.max(jnp.abs(d)) * Rf.shape[0]
+    floor = jnp.maximum(rel, jnp.sqrt(jnp.asarray(finfo.tiny, dt)))
+    safe = jnp.where(d < 0, -1.0, 1.0) * jnp.maximum(jnp.abs(d), floor)
     Rf = Rf.at[jnp.arange(Rf.shape[0]), jnp.arange(Rf.shape[0])].set(safe)
     X = jax.scipy.linalg.solve_triangular(Rf, Q.T.astype(dt) @ Y.astype(dt), lower=False)
     return X

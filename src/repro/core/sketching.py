@@ -17,7 +17,11 @@ Every sketch is a small pytree-registered dataclass with three operations:
 
 plus ``cols(offset, size)`` which restricts the *source* dimension to a
 contiguous column window — the streaming primitive Algorithm 3 needs to
-consume ``A`` in L-column panels (``M += S_C A_L S_R[:, cols]ᵀ``).
+consume ``A`` in L-column panels (``M += S_C A_L S_R[:, cols]ᵀ``) — and
+``pad_cols(total)`` which extends the source dimension with *zero-scaled*
+columns so that ``cols()`` windows reaching past the true source dim stay
+valid slices that contribute nothing (the contract zero-padded ragged tail
+panels rely on; see ``repro.stream.engine``).
 
 All randomness is fully determined by an explicit ``jax.random`` key so that
 sketches drawn on different data-parallel workers from a shared seed are
@@ -82,16 +86,22 @@ class GaussianSketch:
         return self.mat.shape[1]
 
     def apply(self, A: jax.Array) -> jax.Array:
-        return self.mat @ A
+        return self.mat[:, : A.shape[0]] @ A  # [:m] slice: padded sketch on unpadded A
 
     def apply_t(self, A: jax.Array) -> jax.Array:
-        return A @ self.mat.T
+        return A @ self.mat[:, : A.shape[-1]].T
 
     def materialize(self) -> jax.Array:
         return self.mat
 
     def cols(self, offset: int, size: int) -> "GaussianSketch":
         return GaussianSketch(jax.lax.dynamic_slice_in_dim(self.mat, offset, size, axis=1))
+
+    def pad_cols(self, total: int) -> "GaussianSketch":
+        if total <= self.m:
+            return self
+        pad = jnp.zeros((self.s, total - self.m), self.mat.dtype)
+        return GaussianSketch(jnp.concatenate([self.mat, pad], axis=1))
 
 
 _register(GaussianSketch, ("mat",), ())
@@ -215,6 +225,16 @@ class CountSketch:
             s=self.s,
         )
 
+    def pad_cols(self, total: int) -> "CountSketch":
+        if total <= self.m:
+            return self
+        pad = total - self.m
+        return CountSketch(
+            hashes=jnp.concatenate([self.hashes, jnp.zeros((pad,), self.hashes.dtype)]),
+            signs=jnp.concatenate([self.signs, jnp.zeros((pad,), self.signs.dtype)]),
+            s=self.s,
+        )
+
 
 _register(CountSketch, ("hashes", "signs"), ("s",))
 
@@ -271,6 +291,17 @@ class OSNAPSketch:
         return OSNAPSketch(
             hashes=jax.lax.dynamic_slice_in_dim(self.hashes, offset, size, axis=1),
             signs=jax.lax.dynamic_slice_in_dim(self.signs, offset, size, axis=1),
+            s=self.s,
+            p=self.p,
+        )
+
+    def pad_cols(self, total: int) -> "OSNAPSketch":
+        if total <= self.m:
+            return self
+        pad = total - self.m
+        return OSNAPSketch(
+            hashes=jnp.concatenate([self.hashes, jnp.zeros((self.p, pad), self.hashes.dtype)], axis=1),
+            signs=jnp.concatenate([self.signs, jnp.zeros((self.p, pad), self.signs.dtype)], axis=1),
             s=self.s,
             p=self.p,
         )
@@ -359,6 +390,9 @@ class ComposedSketch:
 
     def cols(self, offset: int, size: int) -> "ComposedSketch":
         return ComposedSketch(inner=self.inner.cols(offset, size), outer=self.outer)
+
+    def pad_cols(self, total: int) -> "ComposedSketch":
+        return ComposedSketch(inner=self.inner.pad_cols(total), outer=self.outer)
 
 
 _register(ComposedSketch, ("inner", "outer"), ())

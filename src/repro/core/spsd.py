@@ -78,7 +78,7 @@ def nystrom(key, oracle: KernelOracle, n: int, c: int) -> SPSDResult:
     C = oracle(None, idx)  # (n, c)
     W = jnp.take(C, idx, axis=0)  # (c, c) — already-observed entries
     dt = jnp.promote_types(C.dtype, jnp.float32)
-    X = jnp.linalg.pinv(W.astype(dt), rcond=1e-6).astype(C.dtype)
+    X = jnp.linalg.pinv(W.astype(dt), rtol=1e-6).astype(C.dtype)
     return SPSDResult(C=C, X=X, col_idx=idx, entries_observed=n * c)
 
 

@@ -11,6 +11,14 @@ Sketch construction follows Algorithm 3 step 3: OSNAP (p = O(1) nonzeros
 per column) composed with Gaussian projections for Ψ̃/Ω̃, and plain OSNAP
 for the inner S_C/S_R. Space: C (m×c) + R (r×n) + M (s_c×s_r) — the
 O((m+n)k/ε) footprint of Theorem 4; the input panels are never retained.
+
+The per-panel accumulator mechanics live in the shared
+:mod:`repro.stream.engine` (``PanelState`` + ``SP_SVD_OPS``); this module
+keeps the Algorithm-3 surface as thin wrappers. ``fast_sp_svd`` streams
+through the engine's module-scope jitted step — one trace per shape, with
+the ragged tail zero-padded to the panel width (exact: ``pad_cols`` sketch
+windows past ``n`` are zero-scaled). DP-sharded ingestion comes for free via
+:mod:`repro.stream.distributed`.
 """
 
 from __future__ import annotations
@@ -22,12 +30,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..stream.engine import (
+    PanelOps,
+    PanelState,
+    padded_n,
+    panel_update,
+    stream_panels,
+    truncated_R,
+)
 from .gmr import _solve_least_squares, fast_gmr_core
 from .sketching import CountSketch, GaussianSketch, OSNAPSketch, draw_sketch
 
 __all__ = [
     "SPSVDSketches",
     "SPSVDState",
+    "SP_SVD_OPS",
     "sp_svd_sizes",
     "sp_svd_init",
     "sp_svd_update",
@@ -64,20 +81,37 @@ jax.tree_util.register_dataclass(
 )
 
 
-@dataclasses.dataclass
-class SPSVDState:
-    """Streaming accumulators (Algorithm 3 step 4)."""
-
-    C: jax.Array  # (m, c): C += A_L · Ω̃[cols]
-    R: jax.Array  # (r, n): R[:, cols] = G_R Ψ A_L
-    M: jax.Array  # (s_c, s_r): M += S_C A_L S_R[:, cols]ᵀ
-    offset: jax.Array  # columns consumed so far
-    sketches: SPSVDSketches
+# ---------------------------------------------------------------------------
+# PanelStream plug-in (Algorithm 3 steps 6–8): ctx is the SPSVDSketches.
+# ---------------------------------------------------------------------------
 
 
-jax.tree_util.register_dataclass(
-    SPSVDState, data_fields=["C", "R", "M", "offset", "sketches"], meta_fields=[]
+def _svd_core_sketches(sk: SPSVDSketches):
+    return sk.s_c, sk.s_r
+
+
+def _svd_update_c(sk: SPSVDSketches, C, A_L, sc_a, off):
+    # C += A_L · Ω̃[cols]  with  Ω̃[cols] = Ω[:, cols]ᵀ · G_Cᵀ  (never materialized)
+    L = A_L.shape[1]
+    a_omega = sk.omega.cols(off, L).apply_t(A_L)  # A_L (m,L) × Ω[:,cols]ᵀ (L,c0) → (m, c0)
+    return sk, C + sk.g_c.apply_t(a_omega)  # (m, c)
+
+
+def _svd_r_block(sk: SPSVDSketches, A_L, off):
+    # R[:, cols] = G_R · (Ψ A_L)
+    return sk.g_r.apply(sk.psi.apply(A_L))  # (r, L)
+
+
+SP_SVD_OPS = PanelOps(
+    name="sp_svd",
+    core_sketches=_svd_core_sketches,
+    update_c=_svd_update_c,
+    r_block=_svd_r_block,
 )
+
+# Streaming state: the generic engine state with ctx = SPSVDSketches
+# (``state.sketches`` resolves to ctx for back-compat).
+SPSVDState = PanelState
 
 
 def sp_svd_init(
@@ -90,51 +124,45 @@ def sp_svd_init(
     sizes: Optional[dict] = None,
     dtype=jnp.float32,
     osnap_p: int = 2,
+    panel: Optional[int] = None,
 ) -> SPSVDState:
-    """Draw sketches and allocate zero accumulators (Algorithm 3 steps 2–4)."""
+    """Draw sketches and allocate zero accumulators (Algorithm 3 steps 2–4).
+
+    ``panel`` declares a fixed streaming width: the n-dim sketches and the
+    ``R`` accumulator are zero-pad-extended to a whole number of panels so a
+    ragged final panel can be zero-padded instead of retraced (the sketches
+    themselves are drawn over ``n`` — padding never consumes randomness, so
+    results are identical across panel choices).
+    """
     if sizes is None:
         if k is None:
             raise ValueError("pass either `k` (+eps) or explicit `sizes`")
         sizes = sp_svd_sizes(k, eps)
     c, r, c0, r0, s_c, s_r = (sizes[x] for x in ("c", "r", "c0", "r0", "s_c", "s_r"))
+    n_pad = padded_n(n, panel) if panel else n
     keys = jax.random.split(key, 6)
     sk = SPSVDSketches(
         psi=OSNAPSketch.draw(keys[0], r0, m, p=osnap_p, dtype=dtype),
         g_r=GaussianSketch.draw(keys[1], r, r0, dtype=dtype),
-        omega=OSNAPSketch.draw(keys[2], c0, n, p=osnap_p, dtype=dtype),
+        omega=OSNAPSketch.draw(keys[2], c0, n, p=osnap_p, dtype=dtype).pad_cols(n_pad),
         g_c=GaussianSketch.draw(keys[3], c, c0, dtype=dtype),
         s_c=OSNAPSketch.draw(keys[4], s_c, m, p=osnap_p, dtype=dtype),
-        s_r=OSNAPSketch.draw(keys[5], s_r, n, p=osnap_p, dtype=dtype),
+        s_r=OSNAPSketch.draw(keys[5], s_r, n, p=osnap_p, dtype=dtype).pad_cols(n_pad),
     )
     return SPSVDState(
         C=jnp.zeros((m, c), dtype),
-        R=jnp.zeros((r, n), dtype),
+        R=jnp.zeros((r, n_pad), dtype),
         M=jnp.zeros((s_c, s_r), dtype),
         offset=jnp.zeros((), jnp.int32),
-        sketches=sk,
+        ctx=sk,
+        ops=SP_SVD_OPS,
+        n=n,
     )
 
 
 def sp_svd_update(state: SPSVDState, A_L: jax.Array) -> SPSVDState:
     """Consume one L-column panel (Algorithm 3 steps 6–8). jit-compatible."""
-    sk = state.sketches
-    L = A_L.shape[1]
-    off = state.offset
-
-    # C += A_L · Ω̃[cols]  with  Ω̃[cols] = Ω[:, cols]ᵀ · G_Cᵀ  (never materialized)
-    omega_cols = sk.omega.cols(off, L)  # (c0, L) sub-sketch
-    a_omega = omega_cols.apply_t(A_L)  # A_L (m,L) × Ω[:,cols]ᵀ (L,c0) → (m, c0)
-    C = state.C + sk.g_c.apply_t(a_omega)  # (m, c)
-
-    # R[:, cols] = G_R · (Ψ A_L)
-    r_block = sk.g_r.apply(sk.psi.apply(A_L))  # (r, L)
-    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_block, off, axis=1)
-
-    # M += (S_C A_L) · S_R[:, cols]ᵀ
-    sc_a = sk.s_c.apply(A_L)  # (s_c, L)
-    M = state.M + sk.s_r.cols(off, L).apply_t(sc_a)  # (s_c, s_r)
-
-    return SPSVDState(C=C, R=R, M=M, offset=off + L, sketches=sk)
+    return panel_update(state, A_L)
 
 
 def sp_svd_finalize(
@@ -145,10 +173,11 @@ def sp_svd_finalize(
     Returns (U, Σ, V) with ``A ≈ U diag(Σ) Vᵀ``; ranks are c/r (not k) unless
     ``k`` is given, matching §6.3's "without fixed rank" protocol.
     """
-    sk = state.sketches
+    sk = state.ctx
+    R = truncated_R(state)
     dt = jnp.promote_types(state.C.dtype, jnp.float32)
     U_C, _ = jnp.linalg.qr(state.C.astype(dt))  # (m, c)
-    V_R, _ = jnp.linalg.qr(state.R.T.astype(dt))  # (n, r)
+    V_R, _ = jnp.linalg.qr(R.T.astype(dt))  # (n, r)
 
     ScU = sk.s_c.apply(U_C.astype(state.C.dtype)).astype(dt)  # (s_c, c)
     SrV = sk.s_r.apply(V_R.astype(state.C.dtype)).astype(dt)  # (s_r, r)
@@ -173,16 +202,15 @@ def fast_sp_svd(
     panel: int = 512,
     fixed_rank: Optional[int] = None,
 ):
-    """One-shot Algorithm 3: stream ``A`` through the panel loop internally."""
+    """One-shot Algorithm 3: stream ``A`` through the panel loop internally.
+
+    Every panel — including a ragged tail, zero-padded to ``panel`` — goes
+    through the engine's module-scope jitted step: one trace per (m, panel)
+    shape for the process lifetime.
+    """
     m, n = A.shape
-    state = sp_svd_init(key, m, n, k=k, eps=eps, sizes=sizes, dtype=A.dtype)
-    step = jax.jit(sp_svd_update)
-    for off in range(0, n, panel):
-        width = min(panel, n - off)
-        if width != panel:  # last ragged panel: use an unjitted call
-            state = sp_svd_update(state, A[:, off : off + width])
-        else:
-            state = step(state, jax.lax.dynamic_slice_in_dim(A, off, panel, axis=1))
+    state = sp_svd_init(key, m, n, k=k, eps=eps, sizes=sizes, dtype=A.dtype, panel=panel)
+    state = stream_panels(state, A, panel)
     return sp_svd_finalize(state, k=fixed_rank)
 
 

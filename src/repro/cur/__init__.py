@@ -7,7 +7,9 @@ Layered subsystem:
 * :mod:`repro.cur.cur`       — :func:`exact_cur` oracle and the Algorithm-1
   :func:`fast_cur` with Table-2 sketch-size defaults + ρ-branch selection.
 * :mod:`repro.cur.streaming` — single-pass CUR over L-column panels (the
-  Algorithm-3 streaming contract) for matrices that never fit in memory.
+  shared :mod:`repro.stream` engine contract) for matrices that never fit
+  in memory; adaptive in-stream column admission and DP-sharded ingestion
+  live in :mod:`repro.stream` (re-exported here).
 * :mod:`repro.cur.batched`   — vmapped CUR of matrix stacks for serving,
   fused-Pallas-kernel core product.
 """
@@ -29,11 +31,13 @@ from .streaming import (
     streaming_cur_update,
 )
 from .batched import batched_fast_cur, draw_shared_sketches
+from ..stream.adaptive import adaptive_cur_finalize, adaptive_cur_init
 
 __all__ = [
     "SELECTION_POLICIES", "Selection", "select_columns", "select_rows",
     "CURResult", "cur_error_ratio", "cur_reconstruct", "cur_relative_error",
     "cur_sketch_sizes", "exact_cur", "fast_cur",
     "StreamingCURState", "streaming_cur_finalize", "streaming_cur_init", "streaming_cur_update",
+    "adaptive_cur_finalize", "adaptive_cur_init",
     "batched_fast_cur", "draw_shared_sketches",
 ]

@@ -1,7 +1,8 @@
 """Single-pass streaming CUR over L-column panels.
 
-Same streaming contract as ``repro.core.svd.sp_svd_update`` (Algorithm 3):
-``A`` arrives as column panels ``A_L`` and is never retained. Per panel:
+Same streaming contract as ``repro.core.svd.sp_svd_update`` (Algorithm 3) —
+both now ride the shared :mod:`repro.stream.engine`: ``A`` arrives as column
+panels ``A_L`` and is never retained. Per panel:
 
 * ``C``: the panel's selected columns land in their slots (selected column
   j with ``offset ≤ col_idx[j] < offset+L`` is copied out of the panel);
@@ -16,9 +17,10 @@ Because ``Σ_L S_C A_L S_R[:,cols]ᵀ = S_C A S_Rᵀ`` exactly, the finalized
 factors match one-shot :func:`repro.cur.fast_cur` on identical sketches up
 to fp32 summation order (tested in ``tests/test_cur.py``).
 
-Selection indices must be fixed before the pass (uniform, or scores from a
-prior epoch / sketched estimate) — the single-pass constraint; adaptive
-in-stream column addition is a ROADMAP open item.
+This module keeps *fixed* pre-pass indices (uniform, or scores from a prior
+epoch / sketched estimate). For residual-driven in-stream column admission
+see :mod:`repro.stream.adaptive`; for DP-sharded ingestion of either
+variant see :mod:`repro.stream.distributed`.
 """
 
 from __future__ import annotations
@@ -31,30 +33,62 @@ import jax.numpy as jnp
 
 from ..core.gmr import fast_gmr_core
 from ..core.sketching import draw_sketch
+from ..stream.engine import PanelOps, PanelState, padded_n, panel_update, truncated_R
 from .cur import CURResult, cur_sketch_sizes
 
-__all__ = ["StreamingCURState", "streaming_cur_init", "streaming_cur_update", "streaming_cur_finalize"]
+__all__ = [
+    "StreamingCURState",
+    "CURStreamCtx",
+    "STREAMING_CUR_OPS",
+    "streaming_cur_init",
+    "streaming_cur_update",
+    "streaming_cur_finalize",
+]
 
 
-@dataclasses.dataclass
-class StreamingCURState:
-    """Streaming accumulators + the shared sketching operators."""
+@dataclasses.dataclass(frozen=True)
+class CURStreamCtx:
+    """Fixed selection indices + the shared core sketching operators."""
 
-    C: jax.Array  # (m, c) — filled as selected columns stream past
-    R: jax.Array  # (r, n) — filled panel-by-panel
-    M: jax.Array  # (s_c, s_r) — running S_C A S_Rᵀ
-    offset: jax.Array  # columns consumed so far
     col_idx: jax.Array  # (c,)
     row_idx: jax.Array  # (r,)
     S_C: object  # column-sliceable sketch, (s_c, m)
-    S_R: object  # column-sliceable sketch, (s_r, n)
+    S_R: object  # column-sliceable sketch, (s_r, n_pad)
 
 
 jax.tree_util.register_dataclass(
-    StreamingCURState,
-    data_fields=["C", "R", "M", "offset", "col_idx", "row_idx", "S_C", "S_R"],
-    meta_fields=[],
+    CURStreamCtx, data_fields=["col_idx", "row_idx", "S_C", "S_R"], meta_fields=[]
 )
+
+
+def _cur_core_sketches(ctx: CURStreamCtx):
+    return ctx.S_C, ctx.S_R
+
+
+def _cur_update_c(ctx: CURStreamCtx, C, A_L, sc_a, off):
+    # selected columns that live in this panel → their C slots
+    L = A_L.shape[1]
+    rel = ctx.col_idx - off
+    in_panel = (rel >= 0) & (rel < L)
+    picked = jnp.take(A_L, jnp.clip(rel, 0, L - 1), axis=1)  # (m, c)
+    return ctx, jnp.where(in_panel[None, :], picked.astype(C.dtype), C)
+
+
+def _cur_r_block(ctx: CURStreamCtx, A_L, off):
+    # selected rows of the panel → R[:, off:off+L]
+    return jnp.take(A_L, ctx.row_idx, axis=0)  # (r, L)
+
+
+STREAMING_CUR_OPS = PanelOps(
+    name="streaming_cur",
+    core_sketches=_cur_core_sketches,
+    update_c=_cur_update_c,
+    r_block=_cur_r_block,
+)
+
+# Streaming state: the generic engine state with ctx = CURStreamCtx
+# (``state.S_C`` etc. resolve through to ctx for back-compat).
+StreamingCURState = PanelState
 
 
 def streaming_cur_init(
@@ -72,8 +106,13 @@ def streaming_cur_init(
     osnap_p: int = 2,
     dtype=jnp.float32,
     sketches=None,
+    panel: Optional[int] = None,
 ) -> StreamingCURState:
-    """Draw column-sliceable core sketches and allocate zero accumulators."""
+    """Draw column-sliceable core sketches and allocate zero accumulators.
+
+    ``panel`` pre-pads ``R``/``S_R`` to a whole number of panels so ragged
+    tails can be zero-padded (exact; see ``repro.stream.engine``).
+    """
     col_idx = jnp.asarray(col_idx, jnp.int32)
     row_idx = jnp.asarray(row_idx, jnp.int32)
     c, r = col_idx.shape[0], row_idx.shape[0]
@@ -88,43 +127,29 @@ def streaming_cur_init(
         S_C, S_R = sketches
         s_c, s_r = S_C.s, S_R.s
     S_R.cols(0, 1)  # fail fast on non-sliceable families (srht / sampling)
+    n_pad = padded_n(n, panel) if panel else n
+    ctx = CURStreamCtx(col_idx=col_idx, row_idx=row_idx, S_C=S_C, S_R=S_R.pad_cols(n_pad))
     return StreamingCURState(
         C=jnp.zeros((m, c), dtype),
-        R=jnp.zeros((r, n), dtype),
+        R=jnp.zeros((r, n_pad), dtype),
         M=jnp.zeros((s_c, s_r), dtype),
         offset=jnp.zeros((), jnp.int32),
-        col_idx=col_idx,
-        row_idx=row_idx,
-        S_C=S_C,
-        S_R=S_R,
+        ctx=ctx,
+        ops=STREAMING_CUR_OPS,
+        n=n,
     )
 
 
 def streaming_cur_update(state: StreamingCURState, A_L: jax.Array) -> StreamingCURState:
     """Consume one L-column panel. jit-compatible (L static per panel width)."""
-    L = A_L.shape[1]
-    off = state.offset
-
-    # selected columns that live in this panel → their C slots
-    rel = state.col_idx - off
-    in_panel = (rel >= 0) & (rel < L)
-    picked = jnp.take(A_L, jnp.clip(rel, 0, L - 1), axis=1)  # (m, c)
-    C = jnp.where(in_panel[None, :], picked.astype(state.C.dtype), state.C)
-
-    # selected rows of the panel → R[:, off:off+L]
-    r_block = jnp.take(A_L, state.row_idx, axis=0).astype(state.R.dtype)  # (r, L)
-    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_block, off, axis=1)
-
-    # M += (S_C A_L) · S_R[:, cols]ᵀ
-    sc_a = state.S_C.apply(A_L)  # (s_c, L)
-    M = state.M + state.S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
-
-    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L)
+    return panel_update(state, A_L)
 
 
 def streaming_cur_finalize(state: StreamingCURState) -> CURResult:
     """Fast-GMR core solve on the accumulated pieces (Algorithm 1 step 11)."""
-    ScC = state.S_C.apply(state.C)  # (s_c, c)
-    RSr = state.S_R.apply_t(state.R)  # (r, s_r)
+    ctx = state.ctx
+    R = truncated_R(state)
+    ScC = ctx.S_C.apply(state.C)  # (s_c, c)
+    RSr = ctx.S_R.apply_t(R)  # (r, s_r)
     U = fast_gmr_core(ScC, state.M, RSr)
-    return CURResult(C=state.C, U=U, R=state.R, col_idx=state.col_idx, row_idx=state.row_idx)
+    return CURResult(C=state.C, U=U, R=R, col_idx=ctx.col_idx, row_idx=ctx.row_idx)

@@ -5,4 +5,5 @@ from .synthetic import (
     lowrank_plus_noise,
     powerlaw_matrix,
     sparse_matrix,
+    spiked_decay_matrix,
 )

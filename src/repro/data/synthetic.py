@@ -61,6 +61,19 @@ def lowrank_plus_noise(key, m: int, n: int, rank: int = 10, snr: float = 10.0, d
     return signal + (jnp.linalg.norm(signal) / (snr * jnp.linalg.norm(noise))) * noise
 
 
+def spiked_decay_matrix(
+    key, m: int, n: int, n_spikes: int = 8, spike: float = 6.0, noise: float = 0.05,
+    dtype=jnp.float32,
+):
+    """Fast-decaying background plus a few heavy columns at random positions
+    — the regime where adaptive (residual-driven) column selection separates
+    from uniform pre-pass selection. Returns ``(A, spike_positions)``."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    B = noise * powerlaw_matrix(k1, m, n, 1.5, dtype=dtype)
+    pos = jax.random.choice(k2, n, (n_spikes,), replace=False)
+    return B.at[:, pos].add(spike * jax.random.normal(k3, (m, n_spikes), dtype)), pos
+
+
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
     vocab_size: int

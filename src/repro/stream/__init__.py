@@ -1,0 +1,42 @@
+"""Unified panel-streaming subsystem.
+
+One engine (:mod:`~repro.stream.engine`) owns the per-panel accumulator
+contract shared by the paper's streaming applications — single-pass SVD
+(Algorithm 3, :mod:`repro.core.svd`) and streaming CUR
+(:mod:`repro.cur.streaming`) — which plug in as :class:`PanelOps`. On top:
+
+* :mod:`~repro.stream.distributed` — DP-sharded ingestion: bit-identical
+  sketches per shared seed + disjoint panel ranges + psum/merge finalize
+  reproduce the single-host factors exactly (fp32 summation order aside).
+* :mod:`~repro.stream.adaptive` — residual-driven in-stream column
+  admission for streaming CUR, scored from the sketches alone.
+"""
+
+from .engine import (
+    PanelOps,
+    PanelState,
+    jitted_panel_update,
+    padded_n,
+    panel_update,
+    stream_panels,
+    truncated_R,
+)
+from .distributed import (
+    merge_states,
+    mesh_sharded_stream,
+    shard_panel_ranges,
+    simulate_sharded_stream,
+)
+from .adaptive import (
+    ADAPTIVE_CUR_OPS,
+    AdaptiveCURCtx,
+    adaptive_cur_finalize,
+    adaptive_cur_init,
+)
+
+__all__ = [
+    "PanelOps", "PanelState", "panel_update", "jitted_panel_update",
+    "stream_panels", "padded_n", "truncated_R",
+    "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
+    "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "adaptive_cur_finalize", "adaptive_cur_init",
+]

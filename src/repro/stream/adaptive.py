@@ -1,0 +1,271 @@
+"""Adaptive in-stream column admission for streaming CUR.
+
+Fixed-index streaming CUR must pick its ``col_idx`` before the pass — a
+single uniform pre-pass draw misses the heavy columns of spiked spectra.
+This module closes that gap (ROADMAP open item 1) with a *residual-driven*
+admission policy in the spirit of Wang & Zhang 2016's adaptive sampling,
+computable **from the sketches alone** so the single-pass contract is kept:
+
+Per panel the engine already computes ``sc_a = S_C A_L`` for the M update.
+For each panel column ``y = S_C a_j`` we score how much of it lies outside
+the span of the already-admitted (sketched) columns ``S_C C``:
+
+    ``score_j = || y − (S_C C)(S_C C)⁺ y ||²``
+
+(the sketched least-squares residual; ``S_C`` preserves these norms to
+(1±ε) by the subspace-embedding property). A column is *admitted* into the
+next free ``C`` slot when its score clears ``min_gain ×`` the mean column
+energy — the larger of the running-stream mean and the current panel's mean,
+so noise columns are never "eligible by default" on a cold start — with at
+most ``panel_cap`` admissions per panel so the budget isn't exhausted early.
+
+Bookkeeping is O(s_c·c) extra memory (the ``ScC`` basis copy) and the scorer
+is one (s_c × c_local) QR per panel. Everything is jit-compatible: admission
+uses a rank/slot scatter with ``mode='drop'`` so traced shapes stay static.
+
+Distributed: each DP worker admits into its own ``c/W`` slot range
+(``prep_shard``/``bind_shard``), so merged states never collide; the merged
+result is a valid admission outcome but — unlike the fixed-index paths — not
+bitwise equal to single-host admission (workers score against their local
+basis only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gmr import _solve_least_squares, fast_gmr_core
+from ..core.sketching import draw_sketch
+from .engine import PanelOps, PanelState, padded_n, truncated_R
+
+__all__ = [
+    "AdaptiveCURCtx",
+    "ADAPTIVE_CUR_OPS",
+    "adaptive_cur_init",
+    "adaptive_cur_finalize",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveCURCtx:
+    """Admission state threaded through the panel stream."""
+
+    col_idx: jax.Array  # (c,) int32, −1 = unfilled slot
+    row_idx: jax.Array  # (r,) int32 — rows stay fixed pre-pass
+    S_C: object  # (s_c, m) column-sliceable core sketch
+    S_R: object  # (s_r, n_pad)
+    ScC: jax.Array  # (s_c, c) — sketches of the admitted columns, by slot
+    n_filled: jax.Array  # () int32 — next free slot (within this worker's range)
+    slot_lo: jax.Array  # () int32 — first slot this worker may fill
+    energy: jax.Array  # () f32 — running Σ ||S_C a_j||² over seen columns
+    cols_seen: jax.Array  # () f32 — true (unpadded) columns seen
+    min_gain: jax.Array  # () f32 — admission threshold multiplier
+    c_local: int  # static: number of slots this worker owns
+    panel_cap: int  # static: max admissions per panel
+    n: int  # static: true column count of the stream
+
+
+jax.tree_util.register_dataclass(
+    AdaptiveCURCtx,
+    data_fields=[
+        "col_idx", "row_idx", "S_C", "S_R", "ScC",
+        "n_filled", "slot_lo", "energy", "cols_seen", "min_gain",
+    ],
+    meta_fields=["c_local", "panel_cap", "n"],
+)
+
+
+def _core_sketches(ctx):
+    return ctx.S_C, ctx.S_R
+
+
+def _r_block(ctx, A_L, off):
+    return jnp.take(A_L, ctx.row_idx, axis=0)
+
+
+def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off):
+    """Score this panel's columns against the admitted basis; admit the top
+    residual columns into free slots of this worker's range."""
+    L = A_L.shape[1]
+    c_total = C.shape[1]
+
+    # Sketched residual against the worker's local slot range. The range is
+    # filled as a zero-suffixed prefix, which keeps the floored triangular
+    # solve in _solve_least_squares an *exact* projection onto the filled
+    # span (trailing all-zero columns contribute nothing).
+    ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
+    X = _solve_least_squares(ScC_local, sc_a)  # (c_local, L)
+    resid2 = jnp.sum((sc_a - ScC_local @ X) ** 2, axis=0)  # (L,)
+
+    # Admission threshold: min_gain × the mean column energy, where the mean
+    # is the larger of the running stream mean and the current panel's mean
+    # (over true, unpadded columns). The panel term matters on each worker's
+    # first panels — with a 0 running mean every noise column would otherwise
+    # be "eligible" and greedily exhaust the slot budget before any heavy
+    # column arrives.
+    col_energy = jnp.sum(sc_a * sc_a, axis=0)  # (L,)
+    true_cols = jnp.clip(ctx.n - off, 1, L).astype(jnp.float32)
+    panel_mean = jnp.sum(col_energy) / true_cols
+    run_mean = ctx.energy / jnp.maximum(ctx.cols_seen, 1.0)
+    thresh = ctx.min_gain * jnp.maximum(run_mean, panel_mean)
+    eligible = resid2 > thresh  # strict: zero-padded tail columns never pass
+    # Rank eligible columns by residual energy (ineligible sort last: resid2 ≥ 0 > −1).
+    ranked = jnp.argsort(-jnp.where(eligible, resid2, -1.0))
+    free = ctx.slot_lo + ctx.c_local - ctx.n_filled
+    cap = jnp.minimum(jnp.minimum(free, jnp.sum(eligible)), ctx.panel_cap)
+    slots = jnp.where(jnp.arange(L) < cap, ctx.n_filled + jnp.arange(L), c_total)
+
+    C = C.at[:, slots].set(jnp.take(A_L, ranked, axis=1).astype(C.dtype), mode="drop")
+    ScC = ctx.ScC.at[:, slots].set(jnp.take(sc_a, ranked, axis=1).astype(ctx.ScC.dtype), mode="drop")
+    col_idx = ctx.col_idx.at[slots].set((off + ranked).astype(jnp.int32), mode="drop")
+
+    ctx = dataclasses.replace(
+        ctx,
+        ScC=ScC,
+        col_idx=col_idx,
+        n_filled=ctx.n_filled + cap.astype(jnp.int32),
+        energy=ctx.energy + jnp.sum(col_energy),
+        cols_seen=ctx.cols_seen + jnp.clip(ctx.n - off, 0, L).astype(ctx.cols_seen.dtype),
+    )
+    return ctx, C
+
+
+def _prep_shard(ctx: AdaptiveCURCtx, num_workers: int) -> AdaptiveCURCtx:
+    if ctx.c_local % num_workers:
+        raise ValueError(
+            f"column budget c={ctx.c_local} must divide across {num_workers} workers"
+        )
+    return dataclasses.replace(ctx, c_local=ctx.c_local // num_workers)
+
+
+def _bind_shard(ctx: AdaptiveCURCtx, w) -> AdaptiveCURCtx:
+    lo = (w * ctx.c_local).astype(jnp.int32)
+    return dataclasses.replace(ctx, slot_lo=lo, n_filled=lo)
+
+
+def _merge_ctx(ctxs):
+    base = ctxs[0]
+    return dataclasses.replace(
+        base,
+        ScC=sum((c.ScC for c in ctxs[1:]), base.ScC),  # slot ranges are disjoint
+        col_idx=jnp.max(jnp.stack([c.col_idx for c in ctxs]), axis=0),  # −1 = unfilled
+        n_filled=sum((c.n_filled - c.slot_lo) for c in ctxs).astype(jnp.int32),
+        slot_lo=jnp.zeros((), jnp.int32),
+        energy=sum(c.energy for c in ctxs),
+        cols_seen=sum(c.cols_seen for c in ctxs),
+        c_local=base.col_idx.shape[0],
+    )
+
+
+def _collective_ctx(ctx: AdaptiveCURCtx, axis) -> AdaptiveCURCtx:
+    return dataclasses.replace(
+        ctx,
+        ScC=jax.lax.psum(ctx.ScC, axis),
+        col_idx=jax.lax.pmax(ctx.col_idx, axis),
+        n_filled=jax.lax.psum(ctx.n_filled - ctx.slot_lo, axis).astype(jnp.int32),
+        slot_lo=jnp.zeros((), jnp.int32),
+        energy=jax.lax.psum(ctx.energy, axis),
+        cols_seen=jax.lax.psum(ctx.cols_seen, axis),
+    )
+
+
+ADAPTIVE_CUR_OPS = PanelOps(
+    name="adaptive_cur",
+    core_sketches=_core_sketches,
+    update_c=_update_c,
+    r_block=_r_block,
+    prep_shard=_prep_shard,
+    bind_shard=_bind_shard,
+    merge_ctx=_merge_ctx,
+    collective_ctx=_collective_ctx,
+)
+
+
+def adaptive_cur_init(
+    key,
+    m: int,
+    n: int,
+    c: int,
+    row_idx: jax.Array,
+    *,
+    s_c: Optional[int] = None,
+    s_r: Optional[int] = None,
+    eps: float = 0.05,
+    rho_est: float = 2.0,
+    sketch: str = "countsketch",
+    osnap_p: int = 2,
+    min_gain: float = 2.0,
+    panel_cap: Optional[int] = None,
+    dtype=jnp.float32,
+    sketches=None,
+    panel: Optional[int] = None,
+) -> PanelState:
+    """Allocate an adaptive streaming-CUR state with an empty column budget.
+
+    ``c`` slots are filled in-stream by residual admission; ``row_idx`` stays
+    fixed (row selection is a ROADMAP follow-up). ``panel_cap`` defaults to
+    ``max(1, c // 8)`` so the budget survives past the first panels;
+    ``min_gain`` is the data-relative admission threshold (a column must
+    carry ``min_gain×`` the mean column energy *outside* the current basis).
+    Pass ``panel=`` to pre-pad ``R``/``S_R`` for ragged-tail zero padding.
+    """
+    from ..cur.cur import cur_sketch_sizes  # lazy: repro.cur imports repro.stream
+
+    row_idx = jnp.asarray(row_idx, jnp.int32)
+    r = row_idx.shape[0]
+    n_pad = padded_n(n, panel) if panel else n
+    if sketches is None:
+        sizes = cur_sketch_sizes(c, r, eps=eps, rho=rho_est)
+        s_c = min(s_c or sizes["s_c"], m)
+        s_r = min(s_r or sizes["s_r"], n)
+        k_sc, k_sr = jax.random.split(key)
+        S_C = draw_sketch(k_sc, sketch, s_c, m, p=osnap_p, dtype=dtype)
+        S_R = draw_sketch(k_sr, sketch, s_r, n, p=osnap_p, dtype=dtype)
+    else:
+        S_C, S_R = sketches
+        s_c, s_r = S_C.s, S_R.s
+    S_R.cols(0, 1)  # fail fast on non-sliceable families
+    S_R = S_R.pad_cols(n_pad)
+    ctx = AdaptiveCURCtx(
+        col_idx=jnp.full((c,), -1, jnp.int32),
+        row_idx=row_idx,
+        S_C=S_C,
+        S_R=S_R,
+        ScC=jnp.zeros((s_c, c), dtype),
+        n_filled=jnp.zeros((), jnp.int32),
+        slot_lo=jnp.zeros((), jnp.int32),
+        energy=jnp.zeros((), jnp.float32),
+        cols_seen=jnp.zeros((), jnp.float32),
+        min_gain=jnp.asarray(min_gain, jnp.float32),
+        c_local=c,
+        panel_cap=panel_cap if panel_cap is not None else max(1, c // 8),
+        n=n,
+    )
+    return PanelState(
+        C=jnp.zeros((m, c), dtype),
+        R=jnp.zeros((r, n_pad), dtype),
+        M=jnp.zeros((s_c, s_r), dtype),
+        offset=jnp.zeros((), jnp.int32),
+        ctx=ctx,
+        ops=ADAPTIVE_CUR_OPS,
+        n=n,
+    )
+
+
+def adaptive_cur_finalize(state: PanelState):
+    """Fast-GMR core solve on the admitted columns; unfilled slots (zero
+    columns of C) get zeroed core rows so they cannot inject the floored
+    solve's large-but-finite garbage into downstream consumers."""
+    from ..cur.cur import CURResult  # lazy: repro.cur imports repro.stream
+
+    ctx = state.ctx
+    R = truncated_R(state)
+    RSr = ctx.S_R.apply_t(R)  # (r, s_r)
+    U = fast_gmr_core(ctx.ScC, state.M, RSr)  # ScC ≡ S_C C by construction
+    filled = ctx.col_idx >= 0
+    U = jnp.where(filled[:, None], U, jnp.zeros((), U.dtype))
+    return CURResult(C=state.C, U=U, R=R, col_idx=ctx.col_idx, row_idx=ctx.row_idx)

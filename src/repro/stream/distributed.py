@@ -1,0 +1,189 @@
+"""DP-sharded panel-stream ingestion.
+
+The sketches inside a :class:`~repro.stream.engine.PanelState` are fully
+determined by the init key, so every data-parallel worker holds *bit-identical*
+operators. Each worker then consumes a disjoint, contiguous, panel-aligned
+column range of the stream at its correct global offset, and because all three
+accumulators are sums of per-panel contributions into zero-initialised
+buffers (``C`` and ``R`` writes are disjoint slots/blocks, ``M`` is a running
+sum), the single-host result is recovered *exactly* (up to fp32 summation
+order) by summing the worker accumulators:
+
+    ``Σ_w state_w.{C,R,M}  ==  single-host state.{C,R,M}``
+
+Two execution modes share the same math:
+
+* :func:`simulate_sharded_stream` — run the workers sequentially in-process
+  (any device count; what the parity tests and benchmarks use);
+* :func:`mesh_sharded_stream` — one ``shard_map`` program over a named mesh
+  axis, panels consumed in a ``fori_loop`` per shard and accumulators
+  all-reduced with ``psum`` at the end (the real multi-device path, exercised
+  by ``tests/multidev_scenario.py`` under forced host devices).
+
+Application context that *does* diverge across workers (the adaptive-CUR
+admission state) is reconciled through the optional ``PanelOps`` hooks
+``prep_shard`` / ``bind_shard`` / ``merge_ctx`` / ``collective_ctx``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_map_compat
+from .engine import PanelState, padded_n, panel_update, stream_panels
+
+__all__ = [
+    "shard_panel_ranges",
+    "simulate_sharded_stream",
+    "merge_states",
+    "mesh_sharded_stream",
+]
+
+
+def shard_panel_ranges(n: int, panel: int, num_workers: int) -> List[Tuple[int, int]]:
+    """Contiguous, panel-aligned column ranges ``[lo, hi)`` per worker.
+
+    Panels are dealt out as evenly as possible; only the last worker's range
+    can end ragged (at ``n``). Workers past the panel count get empty ranges.
+    """
+    num_panels = (n + panel - 1) // panel
+    bounds = [round(i * num_panels / num_workers) for i in range(num_workers + 1)]
+    return [
+        (min(bounds[i] * panel, n), min(bounds[i + 1] * panel, n))
+        for i in range(num_workers)
+    ]
+
+
+def _worker_state(state0: PanelState, ctx, lo: int) -> PanelState:
+    return dataclasses.replace(state0, ctx=ctx, offset=jnp.asarray(lo, jnp.int32))
+
+
+def merge_states(states: Sequence[PanelState]) -> PanelState:
+    """Sum worker accumulators into the equivalent single-host state."""
+    states = list(states)
+    base = states[0]
+    C = sum((s.C for s in states[1:]), base.C)
+    R = sum((s.R for s in states[1:]), base.R)
+    M = sum((s.M for s in states[1:]), base.M)
+    if base.ops.merge_ctx is not None:
+        ctx = base.ops.merge_ctx([s.ctx for s in states])
+    else:
+        ctx = base.ctx
+    return dataclasses.replace(
+        base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx
+    )
+
+
+def simulate_sharded_stream(
+    state0: PanelState, A: jax.Array, panel: int, num_workers: int
+) -> PanelState:
+    """Run ``num_workers`` DP workers sequentially in-process and merge.
+
+    Exact parity with single-host streaming for SP-SVD and fixed-index CUR;
+    for adaptive CUR each worker admits into its own slot range (see
+    ``repro.stream.adaptive``), so the merged state is a valid — but not
+    bitwise-identical — admission outcome.
+    """
+    if int(state0.offset) != 0:
+        raise ValueError(
+            "simulate_sharded_stream needs a fresh state: every worker clones "
+            "state0's accumulators, so a partially-streamed prefix would be "
+            f"summed once per worker (offset={int(state0.offset)})"
+        )
+    n = min(A.shape[1], state0.n)
+    ranges = shard_panel_ranges(n, panel, num_workers)
+    ctx0 = state0.ctx
+    if state0.ops.prep_shard is not None:
+        ctx0 = state0.ops.prep_shard(ctx0, num_workers)
+    shards = []
+    for w, (lo, hi) in enumerate(ranges):
+        ctx = ctx0
+        if state0.ops.bind_shard is not None:
+            ctx = state0.ops.bind_shard(ctx, jnp.asarray(w, jnp.int32))
+        st = _worker_state(state0, ctx, lo)
+        if hi > lo:
+            st = stream_panels(st, A, panel, stop=hi)
+        shards.append(st)
+    # NB: every worker starts from state0's zero accumulators, so the merge
+    # sum is exact only for a fresh (un-streamed) state0.
+    return merge_states(shards)
+
+
+def mesh_sharded_stream(
+    state0: PanelState,
+    A: jax.Array,
+    panel: int,
+    mesh,
+    axis: str = "data",
+) -> PanelState:
+    """One ``shard_map`` program: shard ``A``'s columns over ``mesh[axis]``,
+    stream panels per shard at global offsets, ``psum`` the accumulators.
+
+    Requires the (padded) column count to split into whole panels per worker:
+    ``n_pad % (W · panel) == 0`` with ``W = mesh.shape[axis]``.
+    """
+    if int(state0.offset) != 0:
+        raise ValueError(
+            "mesh_sharded_stream needs a fresh state: every shard starts from "
+            "state0's accumulators, so a partially-streamed prefix would be "
+            f"psum-multiplied (offset={int(state0.offset)})"
+        )
+    n = state0.n
+    W = int(mesh.shape[axis])
+    n_pad = padded_n(n, panel)
+    if n_pad % W or (n_pad // W) % panel:
+        raise ValueError(
+            f"padded column count {n_pad} must split into whole panels per "
+            f"worker (W={W}, panel={panel})"
+        )
+    shard_n = n_pad // W
+    if A.shape[1] != n_pad:
+        A = jnp.pad(A, ((0, 0), (0, n_pad - A.shape[1])))
+    if state0.R.shape[1] != n_pad:
+        raise ValueError("state was initialised without `panel=`; R is unpadded")
+    ops = state0.ops
+    ctx0 = state0.ctx
+    if ops.prep_shard is not None:
+        ctx0 = ops.prep_shard(ctx0, W)
+    state0 = dataclasses.replace(state0, ctx=ctx0)
+
+    from jax.sharding import PartitionSpec as P
+
+    def body(state, A_shard):
+        w = jax.lax.axis_index(axis)
+        ctx = state.ctx
+        if ops.bind_shard is not None:
+            ctx = ops.bind_shard(ctx, w)
+        st = dataclasses.replace(state, ctx=ctx, offset=(w * shard_n).astype(jnp.int32))
+
+        def step(i, st):
+            A_L = jax.lax.dynamic_slice_in_dim(A_shard, i * panel, panel, axis=1)
+            return panel_update(st, A_L)
+
+        st = jax.lax.fori_loop(0, shard_n // panel, step, st)
+        ctx = st.ctx
+        if ops.collective_ctx is not None:
+            ctx = ops.collective_ctx(ctx, axis)
+        return dataclasses.replace(
+            st,
+            C=jax.lax.psum(st.C, axis),
+            R=jax.lax.psum(st.R, axis),
+            M=jax.lax.psum(st.M, axis),
+            offset=jnp.asarray(n, jnp.int32),
+            ctx=ctx,
+        )
+
+    state_specs = jax.tree_util.tree_map(lambda _: P(), state0)
+    out_specs = jax.tree_util.tree_map(lambda _: P(), state0)
+    f = shard_map_compat(
+        body,
+        mesh=mesh,
+        in_specs=(state_specs, P(None, axis)),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    return f(state0, A)

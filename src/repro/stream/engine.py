@@ -1,0 +1,185 @@
+"""Unified panel-streaming engine.
+
+The paper's two streaming applications — single-pass SVD (Algorithm 3,
+``repro.core.svd``) and streaming CUR (``repro.cur.streaming``) — share one
+contract: the input ``A`` arrives as L-column panels ``A_L`` that are never
+retained, and three accumulators are maintained per panel
+
+* ``C``  (m × c)   — a column factor (sketched columns for SP-SVD, actual
+  selected columns for CUR);
+* ``R``  (r × n)   — a row factor filled block-by-block at the panel's
+  column offset;
+* ``M``  (s_c × s_r) — the running core sketch
+  ``M += (S_C A_L) · S_R[:, cols]ᵀ`` via the ``cols()`` sketch-window
+  primitive of :mod:`repro.core.sketching`.
+
+This module owns that contract once. Applications plug in a
+:class:`PanelOps` — three pure functions describing how their ``C``
+contribution and ``R`` block are computed from a panel — and get the shared
+machinery for free: a jit-cached update step (:func:`panel_update` /
+:data:`jitted_panel_update`), zero-padded ragged-tail handling
+(:func:`stream_panels`, exact because ``pad_cols()`` sketch windows past the
+true column count are zero-scaled), and DP-sharded ingestion with exact
+psum/merge finalize (:mod:`repro.stream.distributed`).
+
+Panel width does not change the mathematics: ``Σ_L S_C A_L S_R[:, cols]ᵀ =
+S_C A S_Rᵀ`` exactly, so any panel partition — including the per-worker
+partitions of the distributed path — reproduces the one-shot accumulators up
+to fp32 summation order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PanelOps",
+    "PanelState",
+    "panel_update",
+    "jitted_panel_update",
+    "stream_panels",
+    "padded_n",
+    "truncated_R",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelOps:
+    """The per-application slice of the streaming contract (static metadata).
+
+    All callables must be jit-traceable. ``ctx`` is an application-defined
+    pytree holding sketches / indices / adaptive state; the engine threads it
+    through every update.
+    """
+
+    name: str
+    # ctx -> (S_C-like, S_R-like): the core sketches driving the M update.
+    core_sketches: Callable[[Any], tuple]
+    # (ctx, C, A_L, sc_a, off) -> (ctx', C'): fold one panel into C.
+    # ``sc_a = S_C @ A_L`` is pre-computed by the engine (shared with the M
+    # update) so residual-scoring policies get it for free.
+    update_c: Callable[..., tuple]
+    # (ctx, A_L, off) -> (r, L) block written into R[:, off:off+L].
+    r_block: Callable[..., jax.Array]
+    # Optional distributed hooks (see repro.stream.distributed):
+    # prep_shard(ctx, num_workers) -> ctx   — static, once per run (meta edits)
+    # bind_shard(ctx, w) -> ctx             — per worker, w may be traced
+    # merge_ctx(ctxs) -> ctx                — in-process merge of worker ctxs
+    # collective_ctx(ctx, axis_name) -> ctx — shard_map all-reduce of ctx state
+    prep_shard: Optional[Callable] = None
+    bind_shard: Optional[Callable] = None
+    merge_ctx: Optional[Callable] = None
+    collective_ctx: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class PanelState:
+    """Streaming accumulators + application context.
+
+    ``R`` is allocated at the padded width ``ceil(n/panel)·panel`` when a
+    fixed panel width is declared at init; ``n`` records the true column
+    count so finalizers can truncate.
+    """
+
+    C: jax.Array  # (m, c)
+    R: jax.Array  # (r, n_pad)
+    M: jax.Array  # (s_c, s_r)
+    offset: jax.Array  # () int32 — columns consumed so far (global)
+    ctx: Any  # application pytree (sketches, indices, adaptive state)
+    ops: PanelOps  # static
+    n: int  # static: true column count
+
+    def __getattr__(self, name):
+        # Back-compat with the pre-engine SPSVDState / StreamingCURState
+        # surfaces: delegate unknown attributes (S_C, col_idx, …) to ctx.
+        ctx = object.__getattribute__(self, "ctx")
+        try:
+            return getattr(ctx, name)
+        except AttributeError:
+            raise AttributeError(
+                f"{type(self).__name__} has no attribute {name!r} (nor does its ctx)"
+            ) from None
+
+    @property
+    def sketches(self):
+        """Legacy ``SPSVDState.sketches`` alias for the application ctx."""
+        return self.ctx
+
+
+jax.tree_util.register_dataclass(
+    PanelState, data_fields=["C", "R", "M", "offset", "ctx"], meta_fields=["ops", "n"]
+)
+
+
+def padded_n(n: int, panel: int) -> int:
+    """Column count rounded up to a whole number of panels."""
+    return ((n + panel - 1) // panel) * panel
+
+
+def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
+    """Consume one L-column panel. jit-compatible (L static per panel width).
+
+    ``state.offset`` may be traced (the distributed path binds it to
+    ``axis_index · shard_n``); all window arithmetic is dynamic-slice based.
+    """
+    L = A_L.shape[1]
+    off = state.offset
+    ops = state.ops
+
+    S_C, S_R = ops.core_sketches(state.ctx)
+    sc_a = S_C.apply(A_L)  # (s_c, L) — shared by the M update and update_c
+    M = state.M + S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
+
+    ctx, C = ops.update_c(state.ctx, state.C, A_L, sc_a, off)
+    r_blk = ops.r_block(ctx, A_L, off).astype(state.R.dtype)
+    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_blk, off, axis=1)
+
+    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L, ctx=ctx)
+
+
+# Module-scope jit: one trace per (shapes, ops) pair for the whole process —
+# callers that used to rebuild ``jax.jit(update)`` per invocation retraced on
+# every call.
+jitted_panel_update = jax.jit(panel_update)
+
+
+def stream_panels(
+    state: PanelState, A: jax.Array, panel: int, *, stop: Optional[int] = None, jit: bool = True
+) -> PanelState:
+    """Drive columns ``[offset, stop)`` of ``A`` through the engine in
+    fixed-width panels, zero-padding the ragged tail. Host-side driver:
+    ``state.offset`` must be concrete.
+
+    The tail padding is exact — not approximate — because the state's
+    sketches were extended with ``pad_cols`` at init: windows past the true
+    column count are zero-scaled, and the padded columns of ``A_L`` are zero,
+    so the padded block contributes nothing to C, R or M. The fixed width
+    keeps every call on the single cached trace of
+    :data:`jitted_panel_update`.
+    """
+    n = A.shape[1]
+    start = int(state.offset)
+    stop = min(n, state.n) if stop is None else stop
+    if state.R.shape[1] < padded_n(stop - start, panel) + start:
+        raise ValueError(
+            f"state was initialised without room for panel={panel} tail padding "
+            f"(R width {state.R.shape[1]}, need {start + padded_n(stop - start, panel)}); "
+            "pass `panel=` at init"
+        )
+    step = jitted_panel_update if jit else panel_update
+    for off in range(start, stop, panel):
+        width = min(panel, stop - off)
+        A_L = jax.lax.dynamic_slice_in_dim(A, off, width, axis=1)
+        if width != panel:
+            A_L = jnp.pad(A_L, ((0, 0), (0, panel - width)))
+        state = step(state, A_L)
+    return state
+
+
+def truncated_R(state: PanelState) -> jax.Array:
+    """``R`` restricted to the true (unpadded) column range."""
+    return state.R[:, : state.n]

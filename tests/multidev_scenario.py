@@ -130,12 +130,79 @@ def scenario_compressed_reduces_wire_bytes():
     )
 
 
+def scenario_stream_sharded_equals_single():
+    """mesh_sharded_stream (shard_map over data=4) == single-host panel
+    streaming for both SP-SVD and streaming CUR, and adaptive-CUR admission
+    runs under shard_map (per-worker slot ranges) producing a finite, valid
+    factorization."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.svd import sp_svd_finalize, sp_svd_init
+    from repro.cur.streaming import streaming_cur_finalize, streaming_cur_init
+    from repro.data.synthetic import powerlaw_matrix
+    from repro.stream import (
+        adaptive_cur_finalize,
+        adaptive_cur_init,
+        mesh_sharded_stream,
+        stream_panels,
+    )
+
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+    m, n, panel = 200, 256, 32
+    A = powerlaw_matrix(jax.random.key(0), m, n, 1.0)
+    sizes = dict(c=20, r=20, c0=60, r0=60, s_c=60, s_r=60)
+
+    # SP-SVD parity
+    single = stream_panels(sp_svd_init(jax.random.key(1), m, n, sizes=sizes, panel=panel), A, panel)
+    shard = mesh_sharded_stream(
+        sp_svd_init(jax.random.key(1), m, n, sizes=sizes, panel=panel), A, panel, mesh
+    )
+    np.testing.assert_allclose(np.asarray(shard.M), np.asarray(single.M), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(shard.C), np.asarray(single.C), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(shard.R), np.asarray(single.R), atol=2e-3)
+    U1, S1, V1 = sp_svd_finalize(single)
+    U2, S2, V2 = sp_svd_finalize(shard)
+    np.testing.assert_allclose(
+        np.asarray((U1 * S1[None]) @ V1.T), np.asarray((U2 * S2[None]) @ V2.T), atol=5e-3
+    )
+
+    # streaming-CUR parity
+    ci = jnp.asarray([3, 50, 99, 120, 200, 7, 31, 88], jnp.int32)
+    ri = jnp.asarray([5, 17, 40, 77, 90, 120, 150, 199], jnp.int32)
+
+    def cinit():
+        return streaming_cur_init(jax.random.key(2), m, n, ci, ri, sketch="countsketch", panel=panel)
+
+    res1 = streaming_cur_finalize(stream_panels(cinit(), A, panel))
+    res2 = streaming_cur_finalize(mesh_sharded_stream(cinit(), A, panel, mesh))
+    np.testing.assert_array_equal(np.asarray(res1.C), np.asarray(res2.C))
+    np.testing.assert_allclose(np.asarray(res1.U), np.asarray(res2.U), atol=2e-3)
+
+    # adaptive admission under shard_map: finds the planted spikes
+    B = 0.05 * powerlaw_matrix(jax.random.key(3), m, n, 1.5)
+    pos = jnp.asarray([17, 77, 130, 222])
+    B = B.at[:, pos].add(6.0 * jax.random.normal(jax.random.key(4), (m, 4)))
+    st = adaptive_cur_init(
+        jax.random.key(5), m, n, 8, ri, sketch="countsketch", panel=panel, panel_cap=2
+    )
+    res = adaptive_cur_finalize(mesh_sharded_stream(st, B, panel, mesh))
+    admitted = set(np.asarray(res.col_idx).tolist())
+    missed = set(np.asarray(pos).tolist()) - admitted
+    assert len(missed) <= 1, (sorted(admitted), np.asarray(pos).tolist())
+    recon = np.asarray(res.C) @ np.asarray(res.U) @ np.asarray(res.R)
+    rel = np.linalg.norm(np.asarray(B) - recon) / np.linalg.norm(np.asarray(B))
+    assert np.isfinite(rel) and rel < 0.5, rel
+    print("OK scenario_stream_sharded_equals_single")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {
         "sharded": scenario_sharded_equals_single,
         "compressed": scenario_compressed_step_converges,
         "wire": scenario_compressed_reduces_wire_bytes,
+        "stream": scenario_stream_sharded_equals_single,
     }
     if which == "all":
         for fn in fns.values():

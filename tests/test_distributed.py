@@ -23,7 +23,9 @@ def _spec(path_names, shape, rules, mesh):
     import jax.tree_util as jtu
 
     path = tuple(jtu.DictKey(n) for n in path_names)
-    return leaf_pspec(path, jnp.zeros(shape), rules, mesh)
+    # leaf_pspec only reads .ndim/.shape — a ShapeDtypeStruct avoids
+    # materializing multi-GB zero buffers for the large-tensor rule cases
+    return leaf_pspec(path, jax.ShapeDtypeStruct(shape, jnp.float32), rules, mesh)
 
 
 MESH = FakeMesh({"data": 16, "model": 16})

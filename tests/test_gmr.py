@@ -43,7 +43,10 @@ def test_lemma2_pythagorean():
         np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
 
 
-@pytest.mark.parametrize("sketch", ["gaussian", "countsketch", "osnap", "srht"])
+@pytest.mark.parametrize(
+    "sketch",
+    ["gaussian", "countsketch", "osnap", pytest.param("srht", marks=pytest.mark.slow)],
+)
 def test_fast_gmr_relative_error(sketch):
     """Theorem 1: moderate sketch sizes give small relative error."""
     A, C, R = _problem(jax.random.key(2))
@@ -79,6 +82,37 @@ def test_rho_positive_and_finite():
     A, C, R = _problem(jax.random.key(4))
     val = float(rho(A, C, R))
     assert 0 < val < 100
+
+
+def test_lstsq_all_zero_operand_is_finite():
+    """Regression: an all-zero sketched block (e.g. a CountSketch-collision-
+    wiped panel) must yield a finite (zero) core, not NaN. The old relative
+    floor `eps·max|d|·k` collapsed to 0 on an all-zero operand, letting zero
+    diagonals through to solve_triangular (0/0 → NaN)."""
+    Z = jnp.zeros((40, 8))
+    Y = jnp.zeros((40, 6))
+    X = _solve_least_squares(Z, Y)
+    assert bool(jnp.all(jnp.isfinite(X))), X
+    np.testing.assert_allclose(X, 0.0)
+    # full GMR core path: all three sketched pieces wiped
+    core = fast_gmr_core(jnp.zeros((30, 5)), jnp.zeros((30, 25)), jnp.zeros((4, 25)))
+    assert bool(jnp.all(jnp.isfinite(core))), core
+    np.testing.assert_allclose(core, 0.0)
+
+
+def test_lstsq_floor_is_sign_preserving():
+    """Tiny and exactly-zero pivots get the same magnitude floor (the old
+    guard double-floored exact zeros to 2·eps while tiny entries got eps),
+    and negative pivots keep their sign through the floor."""
+    Y = jnp.ones((2, 1), jnp.float32)
+    xs = {
+        d2: float(_solve_least_squares(jnp.diag(jnp.asarray([1.0, d2], jnp.float32)), Y)[1, 0])
+        for d2 in (0.0, 1e-30, -1e-30)
+    }
+    assert all(np.isfinite(v) for v in xs.values()), xs
+    assert xs[-1e-30] < 0 < xs[1e-30], xs  # sign preserved
+    np.testing.assert_allclose(xs[0.0], xs[1e-30])  # zero == tiny floor
+    np.testing.assert_allclose(xs[0.0], -xs[-1e-30])  # symmetric magnitude
 
 
 def test_lstsq_solver_matches_numpy():

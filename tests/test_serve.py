@@ -42,6 +42,7 @@ def test_generate_matches_rerun_prefill():
     np.testing.assert_array_equal(np.asarray(toks[:, 1]), np.asarray(expect))
 
 
+@pytest.mark.slow
 def test_kv_compression_lowrank_history():
     """Rank-8 history compresses near-exactly at rank 16 (one pass)."""
     key = jax.random.key(2)
@@ -64,6 +65,7 @@ def test_kv_compression_memory_model():
     assert dense / compressed > 5  # d/r ≈ 8x minus factor overheads
 
 
+@pytest.mark.slow
 def test_lowrank_decode_attention_close_to_exact():
     """Attention against factors ≈ exact attention when history is low-rank."""
     B, KV, G, S, d = 1, 2, 2, 256, 32

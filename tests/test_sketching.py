@@ -33,6 +33,7 @@ def test_cols_slicing(kind):
     )
 
 
+@pytest.mark.slow
 @settings(deadline=None, max_examples=15)
 @given(
     kind=st.sampled_from(["gaussian", "countsketch", "osnap", "srht"]),

@@ -29,6 +29,7 @@ def _mean_err(fn, K, trials=3):
     return float(np.mean([float(spsd_error_ratio(K, fn(jax.random.key(31 * t)))) for t in range(trials)]))
 
 
+@pytest.mark.slow
 def test_alg2_close_to_optimal_at_s10c(kernel_setup):
     """§6.2: faster-SPSD ≈ optimal once s = 10c."""
     n, oracle, K = kernel_setup

@@ -1,0 +1,260 @@
+"""Unified panel-streaming engine (repro/stream/): shared contract,
+DP-sharded ingestion parity, adaptive column admission, edge cases."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    fast_sp_svd,
+    sp_svd_finalize,
+    sp_svd_init,
+    sp_svd_update,
+)
+from repro.cur import (
+    cur_reconstruct,
+    cur_relative_error,
+    fast_cur,
+    select_rows,
+    streaming_cur_finalize,
+    streaming_cur_init,
+    streaming_cur_update,
+)
+from repro.data.synthetic import powerlaw_matrix, spiked_decay_matrix
+from repro.stream import (
+    adaptive_cur_finalize,
+    adaptive_cur_init,
+    jitted_panel_update,
+    merge_states,
+    shard_panel_ranges,
+    simulate_sharded_stream,
+    stream_panels,
+)
+
+SIZES = dict(c=24, r=24, c0=72, r0=72, s_c=72, s_r=72)
+M, N = 220, 180
+
+
+@pytest.fixture(scope="module")
+def A():
+    return powerlaw_matrix(jax.random.key(0), M, N, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# shared engine: panel-width / ordering edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_irregular_panel_widths_match_oneshot(A):
+    """Permuted irregular panel partitions hit identical accumulators."""
+    ref = sp_svd_update(sp_svd_init(jax.random.key(1), M, N, sizes=SIZES), A)
+    for widths in ([37, 80, 13, 50], [80, 50, 37, 13], [1, 99, 2, 78]):
+        assert sum(widths) == N
+        st = sp_svd_init(jax.random.key(1), M, N, sizes=SIZES)
+        off = 0
+        for w in widths:
+            st = sp_svd_update(st, A[:, off : off + w])
+            off += w
+        np.testing.assert_allclose(st.C, ref.C, atol=2e-3)
+        np.testing.assert_allclose(st.R, ref.R, atol=2e-3)
+        np.testing.assert_allclose(st.M, ref.M, atol=2e-3)
+
+
+def test_ragged_tail_zero_padding_is_exact(A):
+    """fast_sp_svd with a non-dividing panel == one whole-matrix panel."""
+    outs = []
+    for panel in (N, 96):  # 180 = 96 + 84 → zero-padded tail
+        U, S, V = fast_sp_svd(jax.random.key(2), A, sizes=SIZES, panel=panel)
+        outs.append((U * S[None]) @ V.T)
+    np.testing.assert_allclose(outs[1], outs[0], atol=5e-3)
+
+
+def test_jitted_step_is_cached_across_calls(A):
+    """The engine step is jitted once at module scope — repeat fast_sp_svd
+    calls (same shapes) must not add traces (the old per-call jax.jit
+    rebuild retraced every invocation)."""
+    fast_sp_svd(jax.random.key(3), A, sizes=SIZES, panel=96)
+    before = jitted_panel_update._cache_size()
+    fast_sp_svd(jax.random.key(4), A, sizes=SIZES, panel=96)
+    fast_sp_svd(jax.random.key(5), A, sizes=SIZES, panel=96)
+    assert jitted_panel_update._cache_size() == before
+
+
+def test_streaming_cur_duplicate_col_idx(A):
+    """Duplicate entries in col_idx fill every duplicated slot, and the
+    streamed accumulators equal the one-shot sketched pieces. (U itself is
+    not compared: with duplicated columns the core solve is rank-deficient,
+    so U is non-unique — only the accumulators and the fit are determined.)"""
+    # 8 slots / 8 rows / panel 32: shares the jitted-step cache entry with
+    # the sharded-parity tests below
+    ci = jnp.asarray([5, 5, 40, 171, 40, 3, 99, 120], jnp.int32)
+    ri = select_rows(jax.random.key(6), A, 8, "uniform").idx
+    st = streaming_cur_init(jax.random.key(7), M, N, ci, ri, sketch="countsketch", panel=32)
+    st = stream_panels(st, A, 32)
+    res = streaming_cur_finalize(st)
+    np.testing.assert_array_equal(res.C, jnp.take(A, ci, axis=1))
+    np.testing.assert_array_equal(res.R, jnp.take(A, ri, axis=0))
+    np.testing.assert_allclose(st.M, st.S_R.apply_t(st.S_C.apply(A)), atol=2e-3)
+    assert bool(jnp.all(jnp.isfinite(res.U)))
+
+
+# ---------------------------------------------------------------------------
+# DP-sharded ingestion: simulated-worker parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_panel_ranges_cover_and_align():
+    for n, panel, w in [(180, 64, 4), (180, 64, 2), (500, 100, 3), (64, 64, 4)]:
+        ranges = shard_panel_ranges(n, panel, w)
+        assert ranges[0][0] == 0 and ranges[-1][1] == n
+        for (lo, hi), (lo2, _) in zip(ranges, ranges[1:]):
+            assert hi == lo2 and lo % panel == 0
+        assert all(lo <= hi for lo, hi in ranges)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_sp_svd_sharded_parity(A, workers):
+    """DP-sharded SP-SVD == single-host within fp32 summation tolerance."""
+    single = stream_panels(sp_svd_init(jax.random.key(8), M, N, sizes=SIZES, panel=32), A, 32)
+    shard = simulate_sharded_stream(
+        sp_svd_init(jax.random.key(8), M, N, sizes=SIZES, panel=32), A, 32, workers
+    )
+    np.testing.assert_allclose(shard.C, single.C, atol=2e-3)
+    np.testing.assert_allclose(shard.R, single.R, atol=2e-3)
+    np.testing.assert_allclose(shard.M, single.M, atol=2e-3)
+    U1, S1, V1 = sp_svd_finalize(single)
+    U2, S2, V2 = sp_svd_finalize(shard)
+    np.testing.assert_allclose(
+        (U1 * S1[None]) @ V1.T, (U2 * S2[None]) @ V2.T, atol=5e-3
+    )
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_streaming_cur_sharded_parity(A, workers):
+    """DP-sharded streaming CUR == single-host factors."""
+    ci = jnp.asarray([3, 50, 99, 120, 164, 7, 31, 88], jnp.int32)
+    ri = select_rows(jax.random.key(9), A, 8, "uniform").idx
+
+    def init():
+        return streaming_cur_init(
+            jax.random.key(10), M, N, ci, ri, sketch="countsketch", panel=32
+        )
+
+    single = streaming_cur_finalize(stream_panels(init(), A, 32))
+    shard = streaming_cur_finalize(simulate_sharded_stream(init(), A, 32, workers))
+    np.testing.assert_array_equal(shard.C, single.C)
+    np.testing.assert_array_equal(shard.R, single.R)
+    np.testing.assert_allclose(shard.U, single.U, atol=2e-3)
+
+
+def test_merge_states_is_accumulator_sum(A):
+    """merge_states is literally Σ_w of the worker accumulators."""
+    states = []
+    for w, (lo, hi) in enumerate(shard_panel_ranges(N, 32, 3)):
+        st = sp_svd_init(jax.random.key(8), M, N, sizes=SIZES, panel=32)
+        import dataclasses
+
+        st = dataclasses.replace(st, offset=jnp.asarray(lo, jnp.int32))
+        st = stream_panels(st, A, 32, stop=hi)
+        states.append(st)
+    merged = merge_states(states)
+    np.testing.assert_allclose(merged.M, sum(s.M for s in states), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# adaptive column admission (acceptance criterion: beats fixed-uniform)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_admits_spiked_columns():
+    B, pos = spiked_decay_matrix(jax.random.key(20), 250, 200)
+    ri = select_rows(jax.random.key(21), B, 20, "uniform").idx
+    st = adaptive_cur_init(
+        jax.random.key(22), 250, 200, 10, ri, sketch="countsketch", panel=40, panel_cap=3
+    )
+    st = stream_panels(st, B, 40)
+    res = adaptive_cur_finalize(st)
+    admitted = set(np.asarray(res.col_idx).tolist())
+    missed = set(np.asarray(pos).tolist()) - admitted
+    assert len(missed) <= 1, (sorted(admitted), sorted(np.asarray(pos).tolist()))
+
+
+def test_adaptive_beats_fixed_uniform_at_equal_budget():
+    """The §ROADMAP claim: residual admission < uniform pre-pass selection
+    on a spiked-decay matrix at the same column budget c."""
+    errs_a, errs_u = [], []
+    for t in range(2):
+        B, _ = spiked_decay_matrix(jax.random.key(30 + t), 250, 200)
+        ri = select_rows(jax.random.key(40 + t), B, 20, "uniform").idx
+        st = adaptive_cur_init(
+            jax.random.key(50 + t), 250, 200, 10, ri, sketch="countsketch", panel=40, panel_cap=3
+        )
+        res_a = adaptive_cur_finalize(stream_panels(st, B, 40))
+        errs_a.append(float(cur_relative_error(B, res_a)))
+        ci = jax.random.choice(jax.random.key(60 + t), 200, (10,), replace=False)
+        stu = streaming_cur_init(
+            jax.random.key(70 + t), 250, 200, ci, ri, sketch="countsketch", panel=40
+        )
+        res_u = streaming_cur_finalize(stream_panels(stu, B, 40))
+        errs_u.append(float(cur_relative_error(B, res_u)))
+    assert np.mean(errs_a) < np.mean(errs_u), (errs_a, errs_u)
+
+
+def test_adaptive_unfilled_slots_are_inert():
+    """A stream with fewer interesting columns than budget leaves slots
+    unfilled (col_idx −1, zero C columns, zero U rows) — finite everywhere."""
+    B = 0.01 * jax.random.normal(jax.random.key(80), (250, 200))
+    B = B.at[:, 13].add(9.0)
+    ri = select_rows(jax.random.key(82), B, 20, "uniform").idx
+    # same (m, n, c, r, panel) as the sharded test → shared compile cache
+    st = adaptive_cur_init(
+        jax.random.key(81), 250, 200, 8, ri, sketch="countsketch", panel=25,
+        panel_cap=1, min_gain=5.0,
+    )
+    res = adaptive_cur_finalize(stream_panels(st, B, 25))
+    idx = np.asarray(res.col_idx)
+    assert (idx == -1).any() and 13 in idx.tolist()
+    unfilled = idx == -1
+    assert bool(jnp.all(jnp.isfinite(res.U)))
+    np.testing.assert_allclose(np.asarray(res.U)[unfilled], 0.0)
+    np.testing.assert_allclose(np.asarray(res.C)[:, unfilled], 0.0)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_adaptive_sharded_still_finds_spikes(workers):
+    """Distributed adaptive admission (per-worker slot ranges) still
+    captures the heavy columns and stays a valid CUR factorization."""
+    B, pos = spiked_decay_matrix(jax.random.key(90), 250, 200, n_spikes=4)
+    ri = select_rows(jax.random.key(91), B, 20, "uniform").idx
+    # panel_cap=1: with only c/W = 2–4 slots per worker, a larger cap would
+    # let a worker exhaust its budget on its first panel before spikes arrive
+    st = adaptive_cur_init(
+        jax.random.key(92), 250, 200, 8, ri, sketch="countsketch", panel=25, panel_cap=1
+    )
+    res = adaptive_cur_finalize(simulate_sharded_stream(st, B, 25, workers))
+    admitted = set(np.asarray(res.col_idx).tolist())
+    missed = set(np.asarray(pos).tolist()) - admitted
+    assert len(missed) <= 1, (sorted(admitted), sorted(np.asarray(pos).tolist()))
+    assert float(cur_relative_error(B, res)) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# multi-device shard_map path (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multidev_stream_parity():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    script = os.path.join(os.path.dirname(__file__), "multidev_scenario.py")
+    proc = subprocess.run(
+        [sys.executable, script, "stream"], capture_output=True, text=True, env=env, timeout=900
+    )
+    assert proc.returncode == 0, f"\nSTDOUT:{proc.stdout[-2000:]}\nSTDERR:{proc.stderr[-3000:]}"
+    assert "OK scenario" in proc.stdout

@@ -70,6 +70,7 @@ def test_fast_beats_practical(A):
     assert e_fast < e_prac, (e_fast, e_prac)
 
 
+@pytest.mark.slow
 def test_error_decreases_with_budget(A):
     k = 10
     errs = []

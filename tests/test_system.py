@@ -16,6 +16,7 @@ from repro.serve import generate
 from repro.train import OptimizerConfig, init_opt_state, make_train_step
 
 
+@pytest.mark.slow
 def test_train_checkpoint_restore_serve(tmp_path):
     """The full lifecycle on one device: loss falls, crash mid-run recovers
     from checkpoint, the final model serves tokens deterministically."""

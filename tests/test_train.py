@@ -58,6 +58,7 @@ def test_cross_entropy_matches_naive():
     np.testing.assert_allclose(cross_entropy(logits, labels), naive, rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """grad accumulation over 4 microbatches == single big batch (linear loss)."""
     cfg = _tiny_cfg()
@@ -74,6 +75,7 @@ def test_microbatch_equivalence():
         np.testing.assert_allclose(a, b, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     from repro.data import DataConfig, SyntheticLM
 
@@ -90,6 +92,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_remat_grad_equivalence():
     """remat=full/dots produce the same update as no remat."""
     cfg = _tiny_cfg()
