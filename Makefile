@@ -3,10 +3,13 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all smoke bench
+.PHONY: test test-slow test-all smoke bench docs-check
 
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
+
+docs-check:  ## docstring audit (repro.stream/repro.cur) + docs/paper_map.md anchors
+	$(PY) tools/check_docstrings.py
 
 test-slow:  ## heavy sweeps + multi-device subprocess scenarios
 	$(PY) -m pytest -x -q -m slow

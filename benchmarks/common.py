@@ -14,10 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import (  # noqa: F401 — re-export
+    drifting_spectrum_matrix,
+    late_spike_matrix,
     lowrank_plus_noise,
     powerlaw_matrix,
     sparse_matrix,
     spiked_decay_matrix,
+    spiked_rows_matrix,
 )
 
 
@@ -40,6 +43,8 @@ def write_bench_json(module: str, rows: list, meta: dict | None = None, out_dir:
         },
         "rows": clean,
     }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir or os.getcwd(), f"BENCH_{module}.json")
     with open(path, "w") as f:
         json.dump(artifact, f, indent=2)

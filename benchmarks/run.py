@@ -18,7 +18,15 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module subset")
     args = ap.parse_args()
 
-    from . import cur_decomp, gmr_error, roofline, single_pass_svd, sketch_perf, spsd_approx
+    from . import (
+        cur_decomp,
+        gmr_error,
+        roofline,
+        single_pass_svd,
+        sketch_perf,
+        spsd_approx,
+        stream_bench,
+    )
 
     modules = {
         "gmr_error": gmr_error,        # paper Fig. 1  (§6.1)
@@ -27,6 +35,7 @@ def main() -> None:
         "single_pass_svd": single_pass_svd,  # paper Fig. 3 (§6.3)
         "sketch_perf": sketch_perf,    # kernel layer
         "roofline": roofline,          # §Roofline terms from dry-run artifacts
+        "stream_bench": stream_bench,  # streaming engine: adaptive/evict/rows + DP parity
     }
     if args.only:
         keep = set(args.only.split(","))

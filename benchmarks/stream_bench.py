@@ -1,5 +1,6 @@
-"""Panel-streaming engine benchmark: adaptive vs fixed-uniform streaming CUR
-and DP-sharded ingestion, on spiked-decay matrices.
+"""Panel-streaming engine benchmark: adaptive vs fixed-uniform streaming CUR,
+eviction vs admission-only, adaptive vs fixed rows, and DP-sharded
+ingestion, on spiked / late-spike / drifting-spectrum matrices.
 
 Rows (→ ``BENCH_stream.json`` via ``benchmarks.common.write_bench_json``):
 
@@ -8,6 +9,14 @@ Rows (→ ``BENCH_stream.json`` via ``benchmarks.common.write_bench_json``):
   admission (same column budget c, same row_idx) on 1/2/4 simulated DP
   workers; ``derived`` records the relative Frobenius error so the
   adaptive-beats-uniform claim is auditable from the artifact.
+* ``stream/cur/<scenario>/<m>x<n>/admit-only|evict`` — the v2 replacement
+  policy on streams where admission-only *provably* loses: ``late-spike``
+  (heavy columns arriving after the budget fills) and ``drift`` (dominant
+  subspace drifting stronger block by block). ``evict_win`` rows record the
+  admission-only/evict error ratio with PASS/FAIL at equal (c, r) budget.
+* ``stream/cur/rows/<m>x<n>/fixed|adaptive`` — fixed pre-pass uniform rows
+  vs in-stream row admission (equal r budget, identical adaptive columns)
+  on spiked-rows matrices, plus a ``row_win`` PASS/FAIL row.
 * ``stream/spsvd/<m>x<n>/parity/w<W>``       — max |Δ| between DP-sharded
   and single-host SP-SVD accumulators (exactness evidence).
 
@@ -31,7 +40,14 @@ from repro.stream import (
     stream_panels,
 )
 
-from .common import spiked_decay_matrix, time_call, write_bench_json
+from .common import (
+    drifting_spectrum_matrix,
+    late_spike_matrix,
+    spiked_decay_matrix,
+    spiked_rows_matrix,
+    time_call,
+    write_bench_json,
+)
 
 
 def _stream(state, A, panel, workers):
@@ -40,9 +56,18 @@ def _stream(state, A, panel, workers):
     return simulate_sharded_stream(state, A, panel, workers)
 
 
-def run(trials: int = 3, quick: bool = False) -> list:
+def _win_row(name: str, lose_err: float, win_err: float, label: str) -> dict:
+    ratio = lose_err / max(win_err, 1e-12)
+    return {
+        "name": name,
+        "us_per_call": 0.0,
+        "derived": f"{label}={ratio:.2f}x({'PASS' if ratio > 1.0 else 'FAIL'}@equal-budget)",
+    }
+
+
+def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
+    """PR-2 scenario kept intact: admission vs fixed-uniform at equal c."""
     rows = []
-    shapes = [(384, 320, 64)] if quick else [(1024, 768, 128), (2048, 1024, 128)]
     c = r = 16
     for m, n, panel in shapes:
         A, pos = spiked_decay_matrix(jax.random.key(m + n), m, n)
@@ -104,8 +129,116 @@ def run(trials: int = 3, quick: bool = False) -> list:
                 "derived": f"uniform_over_adaptive={win:.2f}x"
                            f"({'PASS' if win > 1.0 else 'FAIL'}@equal-c)",
             })
+    return rows
 
-        # SP-SVD DP-sharded parity evidence
+
+def run_eviction(shapes, trials: int) -> list:
+    """v2 acceptance scenario: admission-only vs eviction at equal (c, r)
+    budget on streams engineered so admission-only loses (the budget fills
+    on early/weaker columns before the heavy ones arrive)."""
+    rows = []
+    c, r = 8, 16
+    for m, n, panel in shapes:
+        for scenario in ("late-spike", "drift"):
+            errs = {"admit-only": [], "evict": []}
+            evictions = []
+            for t in range(trials):
+                if scenario == "late-spike":
+                    A, _early, _late = late_spike_matrix(jax.random.key(m + n + 7 * t), m, n)
+                else:
+                    A, _bounds = drifting_spectrum_matrix(jax.random.key(m + n + 7 * t), m, n)
+                ri = select_rows(jax.random.key(11 + t), A, r, "uniform").idx
+                for method, sg in (("admit-only", None), ("evict", 2.0)):
+                    # panel_cap = c//2 so the early/weak columns genuinely fill
+                    # the budget before the heavy ones arrive — the failure
+                    # mode eviction exists for
+                    st = adaptive_cur_init(
+                        jax.random.key(300 + t), m, n, c, ri,
+                        sketch="countsketch", panel=panel, panel_cap=c // 2, swap_gain=sg,
+                    )
+                    st = stream_panels(st, A, panel)
+                    if method == "evict":
+                        evictions.append(int(st.ctx.n_evicted))
+                    errs[method].append(
+                        float(cur_relative_error(A, adaptive_cur_finalize(st)))
+                    )
+            e_admit = float(np.mean(errs["admit-only"]))
+            e_evict = float(np.mean(errs["evict"]))
+            rows.append({
+                "name": f"stream/cur/{scenario}/{m}x{n}/admit-only",
+                "us_per_call": 0.0,
+                "derived": f"rel_err={e_admit:.4f};c={c};panel={panel}",
+                "_rel_err": e_admit,
+            })
+            rows.append({
+                "name": f"stream/cur/{scenario}/{m}x{n}/evict",
+                "us_per_call": 0.0,
+                "derived": f"rel_err={e_evict:.4f};c={c};panel={panel}"
+                           f";evictions={np.mean(evictions):.1f};swap_gain=2.0",
+                "_rel_err": e_evict,
+            })
+            rows.append(_win_row(
+                f"stream/cur/{scenario}/{m}x{n}/evict_win",
+                e_admit, e_evict, "admit_only_over_evict",
+            ))
+    return rows
+
+
+def run_row_admission(shapes, trials: int) -> list:
+    """v2 acceptance scenario: fixed pre-pass uniform rows vs in-stream row
+    admission at equal r budget (identical adaptive-column settings), on
+    matrices with planted heavy rows."""
+    rows = []
+    c, r = 12, 8
+    for m, n, panel in shapes:
+        errs = {"fixed": [], "adaptive": []}
+        captured = []
+        for t in range(trials):
+            A, rpos = spiked_rows_matrix(jax.random.key(m + 3 * n + 13 * t), m, n)
+            for method in ("fixed", "adaptive"):
+                kw = (
+                    dict(row_idx=select_rows(jax.random.key(21 + t), A, r, "uniform").idx)
+                    if method == "fixed"
+                    else dict(row_idx=None, r=r, panel_cap_rows=2)
+                )
+                st = adaptive_cur_init(
+                    jax.random.key(400 + t), m, n, c,
+                    sketch="countsketch", panel=panel, panel_cap=2, **kw,
+                )
+                st = stream_panels(st, A, panel)
+                res = adaptive_cur_finalize(st)
+                if method == "adaptive":
+                    captured.append(
+                        len(set(np.asarray(rpos).tolist()) & set(np.asarray(res.row_idx).tolist()))
+                    )
+                errs[method].append(float(cur_relative_error(A, res)))
+        e_fixed = float(np.mean(errs["fixed"]))
+        e_adapt = float(np.mean(errs["adaptive"]))
+        rows.append({
+            "name": f"stream/cur/rows/{m}x{n}/fixed",
+            "us_per_call": 0.0,
+            "derived": f"rel_err={e_fixed:.4f};r={r};panel={panel}",
+            "_rel_err": e_fixed,
+        })
+        rows.append({
+            "name": f"stream/cur/rows/{m}x{n}/adaptive",
+            "us_per_call": 0.0,
+            "derived": f"rel_err={e_adapt:.4f};r={r};panel={panel}"
+                       f";spiked_rows_admitted={np.mean(captured):.1f}/6",
+            "_rel_err": e_adapt,
+        })
+        rows.append(_win_row(
+            f"stream/cur/rows/{m}x{n}/row_win", e_fixed, e_adapt, "fixed_over_adaptive"
+        ))
+    return rows
+
+
+def run_spsvd_parity(shapes) -> list:
+    """SP-SVD DP-sharded parity evidence (exactness, not speed)."""
+    rows = []
+    c = r = 16
+    for m, n, panel in shapes:
+        A, _pos = spiked_decay_matrix(jax.random.key(m + n), m, n)
         sizes = dict(c=2 * c, r=2 * r, c0=6 * c, r0=6 * r, s_c=6 * c, s_r=6 * r)
         single = stream_panels(
             sp_svd_init(jax.random.key(3), m, n, sizes=sizes, panel=panel), A, panel
@@ -124,6 +257,15 @@ def run(trials: int = 3, quick: bool = False) -> list:
                 "us_per_call": 0.0,
                 "derived": f"max_abs_delta={delta:.2e}",
             })
+    return rows
+
+
+def run(trials: int = 3, quick: bool = False) -> list:
+    shapes = [(384, 320, 64)] if quick else [(1024, 768, 128), (2048, 1024, 128)]
+    rows = run_adaptive_vs_uniform(shapes, trials, quick)
+    rows += run_eviction(shapes, trials)
+    rows += run_row_admission(shapes, trials)
+    rows += run_spsvd_parity(shapes)
     return rows
 
 

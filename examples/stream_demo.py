@@ -1,4 +1,4 @@
-"""Unified panel-streaming engine (repro/stream/) — three modes:
+"""Unified panel-streaming engine (repro/stream/) — five modes:
 
 1. one engine, two applications: SP-SVD and streaming CUR share the panel
    accumulator contract (and one jitted step)
@@ -6,6 +6,10 @@
    merged exactly at finalize
 3. adaptive column admission: streaming CUR that discovers heavy columns
    mid-stream instead of fixing indices before the pass
+4. slot eviction (v2): a late heavy column arriving after the budget fills
+   evicts the weakest admitted slot — admission-only provably loses here
+5. adaptive row admission (v2): heavy rows discovered mid-stream, missed
+   prefixes backfilled from the sketched reconstruction
 
   PYTHONPATH=src python examples/stream_demo.py
 """
@@ -77,3 +81,46 @@ res_u = streaming_cur_finalize(stream_panels(stu, B, panel))
 print(f"adaptive : admitted {len(found)}/8 planted spikes mid-stream, "
       f"rel err = {float(cur_relative_error(B, res_a)):.4f} "
       f"vs fixed-uniform {float(cur_relative_error(B, res_u)):.4f} at equal c")
+
+# ---- 4. slot eviction: late heavy columns after the budget fills -------------
+from repro.data.synthetic import late_spike_matrix, spiked_rows_matrix
+
+D, early_pos, late_pos = late_spike_matrix(jax.random.key(11), m, n)
+early_set = set(np.asarray(early_pos).tolist())
+late_set = set(np.asarray(late_pos).tolist())
+c = 8
+runs = {}
+for label, sg in (("admission-only", None), ("eviction", 2.0)):
+    st = adaptive_cur_init(jax.random.key(12), m, n, c, ri, sketch="countsketch",
+                           panel=panel, panel_cap=c // 2, swap_gain=sg)
+    st = stream_panels(st, D, panel)
+    res = adaptive_cur_finalize(st)
+    runs[label] = (st, res, float(cur_relative_error(D, res)))
+
+(st0, res0, err0), (st1, res1, err1) = runs["admission-only"], runs["eviction"]
+held0 = set(np.asarray(res0.col_idx).tolist())
+held1 = set(np.asarray(res1.col_idx).tolist())
+evicted = sorted(held0 - held1 - {-1})
+print(f"eviction : {len(early_set)} early spikes fill the c={c} budget, then "
+      f"{len(late_set)} heavier ones arrive late")
+print(f"           admission-only holds {sorted(held0 - {-1})} "
+      f"(late captured {len(held0 & late_set)}/{len(late_set)}), rel err = {err0:.4f}")
+print(f"           eviction ({int(st1.ctx.n_evicted)} swaps) evicted {evicted}, now holds "
+      f"{sorted(held1 - {-1})} (late captured {len(held1 & late_set)}/{len(late_set)}), "
+      f"rel err = {err1:.4f}")
+
+# ---- 5. adaptive row admission with sketched backfill ------------------------
+E, row_pos = spiked_rows_matrix(jax.random.key(13), m, n)
+st_f = adaptive_cur_init(jax.random.key(14), m, n, 12, ri, sketch="countsketch",
+                         panel=panel, panel_cap=3)
+res_f = adaptive_cur_finalize(stream_panels(st_f, E, panel))
+st_r = adaptive_cur_init(jax.random.key(14), m, n, 12, None, r=ri.shape[0],
+                         sketch="countsketch", panel=panel, panel_cap=3, panel_cap_rows=2)
+st_r = stream_panels(st_r, E, panel)
+res_r = adaptive_cur_finalize(st_r)
+got = sorted(set(np.asarray(row_pos).tolist()) & set(np.asarray(res_r.row_idx).tolist()))
+offs = np.asarray(st_r.ctx.rows.admit_off)
+print(f"rows     : admitted {len(got)}/{len(np.asarray(row_pos))} planted heavy rows "
+      f"(admit offsets {sorted(int(o) for o in offs[offs >= 0])}), "
+      f"rel err = {float(cur_relative_error(E, res_r)):.4f} "
+      f"vs fixed pre-pass rows {float(cur_relative_error(E, res_f)):.4f} at equal r")

@@ -8,8 +8,9 @@ Layered subsystem:
   :func:`fast_cur` with Table-2 sketch-size defaults + ρ-branch selection.
 * :mod:`repro.cur.streaming` — single-pass CUR over L-column panels (the
   shared :mod:`repro.stream` engine contract) for matrices that never fit
-  in memory; adaptive in-stream column admission and DP-sharded ingestion
-  live in :mod:`repro.stream` (re-exported here).
+  in memory; adaptive in-stream column admission/eviction, adaptive row
+  admission and DP-sharded ingestion live in :mod:`repro.stream`
+  (re-exported here).
 * :mod:`repro.cur.batched`   — vmapped CUR of matrix stacks for serving,
   fused-Pallas-kernel core product.
 """

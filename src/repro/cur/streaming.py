@@ -18,7 +18,8 @@ factors match one-shot :func:`repro.cur.fast_cur` on identical sketches up
 to fp32 summation order (tested in ``tests/test_cur.py``).
 
 This module keeps *fixed* pre-pass indices (uniform, or scores from a prior
-epoch / sketched estimate). For residual-driven in-stream column admission
+epoch / sketched estimate). For residual-driven in-stream column
+admission/eviction and adaptive row admission (the v2 replacement policy)
 see :mod:`repro.stream.adaptive`; for DP-sharded ingestion of either
 variant see :mod:`repro.stream.distributed`.
 """
@@ -110,8 +111,26 @@ def streaming_cur_init(
 ) -> StreamingCURState:
     """Draw column-sliceable core sketches and allocate zero accumulators.
 
-    ``panel`` pre-pads ``R``/``S_R`` to a whole number of panels so ragged
-    tails can be zero-padded (exact; see ``repro.stream.engine``).
+    Args:
+        key: PRNG key for the core sketches (ignored when ``sketches`` given).
+        m, n: stream shape — ``A`` is (m, n), arriving as column panels.
+        col_idx, row_idx: fixed pre-pass selections, (c,) / (r,) int32.
+        s_c, s_r: core sketch sizes; default to the Table-2
+            :func:`cur_sketch_sizes` for ``(c, r, eps, rho_est)``.
+        eps, rho_est: Table-2 sketch-size parameters (ε target, ρ estimate).
+        sketch: column-sliceable family (``countsketch``/``osnap``/``gaussian``).
+        osnap_p: nonzeros per column for the OSNAP family.
+        dtype: accumulator dtype.
+        sketches: optional pre-drawn ``(S_C, S_R)`` pair (shared randomness
+            with a one-shot :func:`repro.cur.fast_cur` for parity tests).
+        panel: fixed streaming width — pre-pads ``R``/``S_R`` to a whole
+            number of panels so ragged tails can be zero-padded (exact; see
+            :mod:`repro.stream.engine`).
+
+    Returns:
+        A fresh :class:`StreamingCURState` with zero (m,c)/(r,n_pad)/(s_c,s_r)
+        accumulators, ready for :func:`streaming_cur_update` /
+        :func:`repro.stream.stream_panels`.
     """
     col_idx = jnp.asarray(col_idx, jnp.int32)
     row_idx = jnp.asarray(row_idx, jnp.int32)
@@ -141,12 +160,23 @@ def streaming_cur_init(
 
 
 def streaming_cur_update(state: StreamingCURState, A_L: jax.Array) -> StreamingCURState:
-    """Consume one L-column panel. jit-compatible (L static per panel width)."""
+    """Consume one (m, L) column panel ``A_L`` at the state's current offset.
+
+    jit-compatible (L static per panel width); thin alias of the shared
+    :func:`repro.stream.engine.panel_update`.
+    """
     return panel_update(state, A_L)
 
 
 def streaming_cur_finalize(state: StreamingCURState) -> CURResult:
-    """Fast-GMR core solve on the accumulated pieces (Algorithm 1 step 11)."""
+    """Fast-GMR core solve on the accumulated pieces (Algorithm 1 step 11).
+
+    Computes ``U = (S_C C)† M (R S_Rᵀ)†`` from the streamed (m,c)/(r,n)
+    factors and the (s_c, s_r) core sketch ``M = S_C A S_Rᵀ``; returns a
+    :class:`~repro.cur.cur.CURResult` matching one-shot
+    :func:`repro.cur.fast_cur` on identical sketches up to fp32 summation
+    order.
+    """
     ctx = state.ctx
     R = truncated_R(state)
     ScC = ctx.S_C.apply(state.C)  # (s_c, c)

@@ -74,6 +74,69 @@ def spiked_decay_matrix(
     return B.at[:, pos].add(spike * jax.random.normal(k3, (m, n_spikes), dtype)), pos
 
 
+def late_spike_matrix(
+    key, m: int, n: int, n_early: int = 8, n_late: int = 6,
+    early: float = 3.0, late: float = 9.0, noise: float = 0.05,
+    early_frac: float = 0.3, late_frac: float = 0.7, dtype=jnp.float32,
+):
+    """The adversarial stream for admission-*only* policies: enough
+    moderately-heavy columns early in the stream to fill any column budget
+    ``c ≤ n_early``, then strictly heavier columns after ``late_frac·n`` —
+    by which point an admission-only policy has no free slots left and loses
+    them, while an eviction policy swaps its weakest admits out. Returns
+    ``(A, early_positions, late_positions)``."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    B = noise * powerlaw_matrix(k1, m, n, 1.5, dtype=dtype)
+    n_head = max(int(early_frac * n), n_early)
+    late_lo = min(int(late_frac * n), n - n_late)
+    if n_head > late_lo:
+        raise ValueError(
+            f"early window [0, {n_head}) overlaps late window [{late_lo}, {n}); "
+            f"need a larger n (or fewer/narrower spike windows) for m×n={m}×{n}"
+        )
+    early_pos = jax.random.choice(k2, n_head, (n_early,), replace=False)
+    late_pos = late_lo + jax.random.choice(k3, n - late_lo, (n_late,), replace=False)
+    B = B.at[:, early_pos].add(early * jax.random.normal(k4, (m, n_early), dtype))
+    B = B.at[:, late_pos].add(late * jax.random.normal(k5, (m, n_late), dtype))
+    return B, early_pos, late_pos
+
+
+def spiked_rows_matrix(
+    key, m: int, n: int, n_spikes: int = 6, spike: float = 6.0, noise: float = 0.05,
+    dtype=jnp.float32,
+):
+    """Transposed analogue of :func:`spiked_decay_matrix`: a few heavy *rows*
+    at random positions over a decaying background — the regime where
+    adaptive in-stream row admission separates from fixed pre-pass (uniform)
+    row selection. Returns ``(A, spiked_row_positions)``."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    B = noise * powerlaw_matrix(k1, m, n, 1.5, dtype=dtype)
+    pos = jax.random.choice(k2, m, (n_spikes,), replace=False)
+    return B.at[pos, :].add(spike * jax.random.normal(k3, (n_spikes, n), dtype)), pos
+
+
+def drifting_spectrum_matrix(
+    key, m: int, n: int, n_blocks: int = 4, rank: int = 4, ramp: float = 2.5,
+    noise: float = 0.05, dtype=jnp.float32,
+):
+    """Column stream whose dominant subspace *drifts*: each successive
+    column block carries a fresh random rank-``rank`` subspace whose energy
+    grows by ``ramp×`` per block. Early blocks clear any data-relative
+    admission threshold and fill the budget; the strictly stronger late
+    blocks then require eviction to be represented. Returns ``(A,
+    block_bounds)`` with ``block_bounds`` the (n_blocks+1,) column offsets."""
+    keys = jax.random.split(key, n_blocks + 1)
+    B = noise * jax.random.normal(keys[0], (m, n), dtype)
+    bounds = np.linspace(0, n, n_blocks + 1).astype(int)
+    for b in range(n_blocks):
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        kL, kR = jax.random.split(keys[b + 1])
+        L = jax.random.normal(kL, (m, rank), dtype)
+        Rf = jax.random.normal(kR, (rank, hi - lo), dtype)
+        B = B.at[:, lo:hi].add((ramp ** b) * (L @ Rf) / np.sqrt(rank))
+    return B, jnp.asarray(bounds, jnp.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
     vocab_size: int

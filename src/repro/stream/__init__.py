@@ -8,8 +8,13 @@ contract shared by the paper's streaming applications — single-pass SVD
 * :mod:`~repro.stream.distributed` — DP-sharded ingestion: bit-identical
   sketches per shared seed + disjoint panel ranges + psum/merge finalize
   reproduce the single-host factors exactly (fp32 summation order aside).
-* :mod:`~repro.stream.adaptive` — residual-driven in-stream column
-  admission for streaming CUR, scored from the sketches alone.
+* :mod:`~repro.stream.adaptive` — residual-driven streaming CUR v2: column
+  admission **and eviction** (``swap_gain`` replacement of the weakest
+  admitted slot) plus in-stream row admission with sketched prefix
+  backfill, all scored from the sketches alone.
+
+See ``docs/streaming.md`` for the architecture guide and
+``docs/paper_map.md`` for the paper-equation → code map.
 """
 
 from .engine import (
@@ -30,6 +35,7 @@ from .distributed import (
 from .adaptive import (
     ADAPTIVE_CUR_OPS,
     AdaptiveCURCtx,
+    AdaptiveRowState,
     adaptive_cur_finalize,
     adaptive_cur_init,
 )
@@ -38,5 +44,6 @@ __all__ = [
     "PanelOps", "PanelState", "panel_update", "jitted_panel_update",
     "stream_panels", "padded_n", "truncated_R",
     "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
-    "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "adaptive_cur_finalize", "adaptive_cur_init",
+    "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "AdaptiveRowState",
+    "adaptive_cur_finalize", "adaptive_cur_init",
 ]

@@ -1,11 +1,15 @@
-"""Adaptive in-stream column admission for streaming CUR.
+"""Adaptive streaming CUR v2: column admission **and eviction**, plus
+in-stream row admission.
 
-Fixed-index streaming CUR must pick its ``col_idx`` before the pass — a
-single uniform pre-pass draw misses the heavy columns of spiked spectra.
-This module closes that gap (ROADMAP open item 1) with a *residual-driven*
-admission policy in the spirit of Wang & Zhang 2016's adaptive sampling,
-computable **from the sketches alone** so the single-pass contract is kept:
+Fixed-index streaming CUR must pick its ``col_idx``/``row_idx`` before the
+pass — a single uniform pre-pass draw misses the heavy columns/rows of
+spiked spectra. This module closes that gap (ROADMAP open items 1–2) with a
+*residual-driven* replacement policy in the spirit of Wang & Zhang 2016's
+adaptive sampling, computable **from the sketches alone** so the
+single-pass contract is kept.
 
+Column scoring (admission + eviction)
+-------------------------------------
 Per panel the engine already computes ``sc_a = S_C A_L`` for the M update.
 For each panel column ``y = S_C a_j`` we score how much of it lies outside
 the span of the already-admitted (sketched) columns ``S_C C``:
@@ -19,15 +23,51 @@ energy — the larger of the running-stream mean and the current panel's mean,
 so noise columns are never "eligible by default" on a cold start — with at
 most ``panel_cap`` admissions per panel so the budget isn't exhausted early.
 
-Bookkeeping is O(s_c·c) extra memory (the ``ScC`` basis copy) and the scorer
-is one (s_c × c_local) QR per panel. Everything is jit-compatible: admission
-uses a rank/slot scatter with ``mode='drop'`` so traced shapes stay static.
+**Eviction** (v2): every admitted slot remembers the residual energy it
+carried at admission time (``slot_score`` — its *retained energy*: how much
+of the column lay outside the then-current basis). Once the budget is full,
+an eligible candidate whose score clears ``swap_gain ×`` the weakest
+admitted slot's retained energy *evicts* that slot: the victim's ``C``
+column, ``ScC`` sketch, ``col_idx`` entry and score are overwritten in
+place, inside the same jitted panel step. This is what admission-only
+single-pass policies structurally cannot do: a heavy column arriving after
+the budget fills (late-spike / drifting-spectrum streams) is no longer
+lost. ``swap_gain=None`` (the default) disables eviction and reproduces the
+v1 admission-only policy exactly.
 
-Distributed: each DP worker admits into its own ``c/W`` slot range
-(``prep_shard``/``bind_shard``), so merged states never collide; the merged
-result is a valid admission outcome but — unlike the fixed-index paths — not
-bitwise equal to single-host admission (workers score against their local
-basis only).
+Row admission (v2)
+------------------
+Rows are scored with the transposed sketch: each panel contributes
+``A_L S_R[:, cols]ᵀ`` to a running accumulator ``row_sketch = A S_Rᵀ``
+(m × s_r — the same order as the ``C`` factor), which after panel ``t``
+holds every row's *exact* sketch over the columns seen so far. Rows are
+scored by their residual against the span of the admitted rows' live
+sketches and admitted into free ``R`` slots under the same
+``min_gain``/``panel_cap`` knobs (``min_gain_rows``/``panel_cap_rows``).
+
+Because ``R`` rows are gathered mid-stream, a row admitted at offset
+``off`` has already missed columns ``[0, off)``. Those entries are
+*backfilled* from the sketched reconstruction: with ``y`` the row's
+accumulated sketch restricted to the missed prefix (kept per-slot in the
+``backfill`` buffer at admission) and ``S`` the prefix window of ``S_R``,
+the minimum-norm reconstruction ``x = Sᵀ(SSᵀ + λI)⁻¹ y`` is written into
+``R[slot, :off]``. This needs writes *outside* the current panel window,
+which is why :class:`~repro.stream.engine.PanelOps` grew the ``update_r``
+hook. Row *eviction* is future work (backfill would have to be re-run for
+the replacement row).
+
+Bookkeeping is O(s_c·c + r·s_r) extra memory plus the O(m·s_r)
+``row_sketch`` accumulator (adaptive rows only), and the scorers are one
+(s_c × c_local) and one (s_r × r_local) QR per panel. Everything is
+jit-compatible: admission/eviction use rank/slot scatters with
+``mode='drop'`` so traced shapes stay static.
+
+Distributed: each DP worker admits into its own ``c/W`` column-slot and
+``r/W`` row-slot range (``prep_shard``/``bind_shard``), so merged states
+never collide (disjoint-slot semantics); the merged result is a valid
+admission outcome but — unlike the fixed-index paths — not bitwise equal to
+single-host admission (workers score against their local basis only, and a
+worker's backfill can only reconstruct the column range it has seen).
 """
 
 from __future__ import annotations
@@ -44,6 +84,7 @@ from .engine import PanelOps, PanelState, padded_n, truncated_R
 
 __all__ = [
     "AdaptiveCURCtx",
+    "AdaptiveRowState",
     "ADAPTIVE_CUR_OPS",
     "adaptive_cur_init",
     "adaptive_cur_finalize",
@@ -51,52 +92,231 @@ __all__ = [
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveRowState:
+    """Adaptive row-admission state (present only when rows are adaptive).
+
+    ``row_sketch`` accumulates ``A S_Rᵀ`` panel-by-panel, so row ``i``'s
+    sketch is exact over the columns this worker has seen; ``backfill``
+    holds, for slots admitted in the *current* panel, the pre-panel sketch
+    of the admitted row (the sketched image of exactly the missed column
+    prefix) consumed by the ``update_r`` backfill; ``admit_off`` records
+    the admission offset per slot (−1 = unfilled) and doubles as the
+    "freshly admitted this panel" marker; ``seen_lo`` is the global column
+    offset where this worker's stream started (−1 until the first panel),
+    bounding the backfillable range. ``gram`` accumulates the prefix Gram
+    ``S_pre S_preᵀ`` of the sketch windows *before* the current panel —
+    the backfill solve's left-hand side — at O(s_r²·L) per panel instead
+    of an O(s_r²·n_pad) rebuild per admission; ``gram_pending`` holds the
+    current panel's window Gram, folded into ``gram`` at the next panel so
+    ``gram`` stays strictly pre-panel when ``_update_r`` consumes it.
+    """
+
+    row_sketch: jax.Array  # (m, s_r) running A S_Rᵀ over seen columns
+    backfill: jax.Array  # (r, s_r) pre-panel sketches of this panel's admits
+    admit_off: jax.Array  # (r,) int32 admission offset per slot, −1 = unfilled
+    gram: jax.Array  # (s_r, s_r) Gram of the S_R windows over [seen_lo, off)
+    gram_pending: jax.Array  # (s_r, s_r) current panel's window Gram
+    n_filled: jax.Array  # () int32 — next free row slot (worker-local range)
+    slot_lo: jax.Array  # () int32 — first row slot this worker may fill
+    min_gain: jax.Array  # () f32 — row admission threshold multiplier
+    seen_lo: jax.Array  # () int32 — first column offset this worker saw, −1 = none
+    r_local: int  # static: number of row slots this worker owns
+    panel_cap: int  # static: max row admissions per panel
+
+
+jax.tree_util.register_dataclass(
+    AdaptiveRowState,
+    data_fields=[
+        "row_sketch", "backfill", "admit_off", "gram", "gram_pending",
+        "n_filled", "slot_lo", "min_gain", "seen_lo",
+    ],
+    meta_fields=["r_local", "panel_cap"],
+)
+
+
+@dataclasses.dataclass(frozen=True)
 class AdaptiveCURCtx:
-    """Admission state threaded through the panel stream."""
+    """Admission/eviction state threaded through the panel stream."""
 
     col_idx: jax.Array  # (c,) int32, −1 = unfilled slot
-    row_idx: jax.Array  # (r,) int32 — rows stay fixed pre-pass
+    row_idx: jax.Array  # (r,) int32, −1 = unfilled (fixed pre-pass when rows=None)
     S_C: object  # (s_c, m) column-sliceable core sketch
     S_R: object  # (s_r, n_pad)
     ScC: jax.Array  # (s_c, c) — sketches of the admitted columns, by slot
+    slot_score: jax.Array  # (c,) f32 — residual energy at admission (retained energy)
     n_filled: jax.Array  # () int32 — next free slot (within this worker's range)
     slot_lo: jax.Array  # () int32 — first slot this worker may fill
     energy: jax.Array  # () f32 — running Σ ||S_C a_j||² over seen columns
     cols_seen: jax.Array  # () f32 — true (unpadded) columns seen
     min_gain: jax.Array  # () f32 — admission threshold multiplier
-    c_local: int  # static: number of slots this worker owns
-    panel_cap: int  # static: max admissions per panel
+    swap_gain: jax.Array  # () f32 — eviction threshold multiplier (+inf = off)
+    n_evicted: jax.Array  # () int32 — total evictions performed
+    rows: Optional[AdaptiveRowState]  # adaptive row admission state, or None
+    c_local: int  # static: number of column slots this worker owns
+    panel_cap: int  # static: max column admissions per panel
     n: int  # static: true column count of the stream
 
 
 jax.tree_util.register_dataclass(
     AdaptiveCURCtx,
     data_fields=[
-        "col_idx", "row_idx", "S_C", "S_R", "ScC",
+        "col_idx", "row_idx", "S_C", "S_R", "ScC", "slot_score",
         "n_filled", "slot_lo", "energy", "cols_seen", "min_gain",
+        "swap_gain", "n_evicted", "rows",
     ],
     meta_fields=["c_local", "panel_cap", "n"],
 )
 
 
 def _core_sketches(ctx):
+    """Engine hook: the (S_C, S_R) pair driving the shared M update."""
     return ctx.S_C, ctx.S_R
 
 
-def _r_block(ctx, A_L, off):
-    return jnp.take(A_L, ctx.row_idx, axis=0)
+# ---------------------------------------------------------------------------
+# column admission + eviction
+# ---------------------------------------------------------------------------
+
+
+def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, A_L, sc_a, resid2, eligible, off):
+    """Greedy per-candidate pass over the top-``panel_cap`` residual columns:
+    admit into the next free slot while the worker's range has one, else
+    evict the weakest admitted slot when the candidate clears ``swap_gain ×``
+    its retained-energy score. Sequential (a ``fori_loop`` of ``panel_cap``
+    scatters) because each decision changes the slot table the next one
+    sees; all shapes stay static via ``mode='drop'`` OOB scatters."""
+    L = A_L.shape[1]
+    c_total = C.shape[1]
+    K = min(ctx.panel_cap, L)
+
+    order = jnp.argsort(-jnp.where(eligible, resid2, -1.0))  # resid2 ≥ 0 > −1
+    cand = order[:K]  # (K,) panel-column ids, best first
+    cand_res = jnp.take(resid2, cand)
+    cand_ok = jnp.take(eligible, cand)
+    cand_A = jnp.take(A_L, cand, axis=1)  # (m, K)
+    cand_sc = jnp.take(sc_a, cand, axis=1)  # (s_c, K)
+
+    slot_ids = jnp.arange(c_total)
+    in_range = (slot_ids >= ctx.slot_lo) & (slot_ids < ctx.slot_lo + ctx.c_local)
+
+    def step(k, carry):
+        C, ScC, col_idx, slot_score, n_filled, n_evicted = carry
+        res, ok = cand_res[k], cand_ok[k]
+        has_free = n_filled < ctx.slot_lo + ctx.c_local
+        # weakest admitted slot of this worker's range (+inf elsewhere, so an
+        # all-masked argmin picks slot 0 but swap_ok is then provably False)
+        scores = jnp.where(in_range & (col_idx >= 0), slot_score, jnp.inf)
+        victim = jnp.argmin(scores).astype(jnp.int32)
+        admit = ok & has_free
+        swap = ok & (~has_free) & (res > ctx.swap_gain * scores[victim])
+        # slot = free slot | victim | c_total (OOB → scatter dropped)
+        slot = jnp.where(admit, n_filled, jnp.where(swap, victim, c_total))
+        C = C.at[:, slot].set(cand_A[:, k].astype(C.dtype), mode="drop")
+        ScC = ScC.at[:, slot].set(cand_sc[:, k].astype(ScC.dtype), mode="drop")
+        col_idx = col_idx.at[slot].set((off + cand[k]).astype(jnp.int32), mode="drop")
+        slot_score = slot_score.at[slot].set(res.astype(slot_score.dtype), mode="drop")
+        return (
+            C, ScC, col_idx, slot_score,
+            n_filled + admit.astype(jnp.int32),
+            n_evicted + swap.astype(jnp.int32),
+        )
+
+    carry = (C, ctx.ScC, ctx.col_idx, ctx.slot_score, ctx.n_filled, ctx.n_evicted)
+    C, ScC, col_idx, slot_score, n_filled, n_evicted = jax.lax.fori_loop(
+        0, K, step, carry
+    )
+    ctx = dataclasses.replace(
+        ctx, ScC=ScC, col_idx=col_idx, slot_score=slot_score,
+        n_filled=n_filled, n_evicted=n_evicted,
+    )
+    return ctx, C
+
+
+def _admit_rows(ctx: AdaptiveCURCtx, A_L, off):
+    """Score every matrix row's accumulated ``A S_Rᵀ`` sketch against the
+    admitted rows' live sketches and admit the top residual rows into free
+    slots of this worker's row range. Returns the updated ctx (row_idx +
+    AdaptiveRowState); the R-side writes happen in ``_update_r``."""
+    rows = ctx.rows
+    L = A_L.shape[1]
+    m = A_L.shape[0]
+    r_total = ctx.row_idx.shape[0]
+
+    window = ctx.S_R.cols(off, L)
+    a_sr = window.apply_t(A_L)  # (m, s_r) this panel's row sketches
+    prev = rows.row_sketch
+    row_sketch = prev + a_sr.astype(prev.dtype)
+    seen_lo = jnp.where(rows.seen_lo < 0, off.astype(jnp.int32), rows.seen_lo)
+    # Rotate the prefix Gram: fold the previous panel's window in, stash the
+    # current one — ``gram`` must cover exactly [seen_lo, off) when the
+    # update_r backfill consumes it later this panel.
+    Sw = window.materialize().astype(jnp.float32)  # (s_r, L)
+    gram = rows.gram + rows.gram_pending
+    gram_pending = Sw @ Sw.T
+
+    # Residual of every row's sketch against the admitted-row span, with the
+    # basis gathered *live* from the accumulator (always-fresh sketches).
+    # Like the column path's ScC slice, the basis is restricted to this
+    # worker's slot range: its range is filled as a zero-suffixed prefix,
+    # which keeps the floored triangular solve an exact projection onto the
+    # filled span (a full-table gather would interleave other ranges'
+    # leading zero columns and break that invariant under sharding).
+    row_idx_local = jax.lax.dynamic_slice_in_dim(
+        ctx.row_idx, rows.slot_lo, rows.r_local, axis=0
+    )
+    filled = row_idx_local >= 0
+    basis = jnp.take(row_sketch, jnp.clip(row_idx_local, 0), axis=0)  # (r_local, s_r)
+    basis = jnp.where(filled[:, None], basis, jnp.zeros((), basis.dtype))
+    X = _solve_least_squares(basis.T, row_sketch.T)  # (r_local, m)
+    resid2 = jnp.sum((row_sketch.T - basis.T @ X) ** 2, axis=0)  # (m,)
+
+    # Threshold: min_gain_rows × the current mean per-row sketch energy.
+    # Already-admitted rows are excluded outright (their residual is fp
+    # noise, but −1-free bookkeeping is cheaper than trusting that).
+    taken = jnp.zeros((m,), bool).at[jnp.where(filled, row_idx_local, m)].set(
+        True, mode="drop"
+    )
+    mean_energy = jnp.sum(row_sketch * row_sketch) / m
+    eligible = (resid2 > rows.min_gain * mean_energy) & ~taken
+
+    K = min(rows.panel_cap, m)
+    ranked = jnp.argsort(-jnp.where(eligible, resid2, -1.0))
+    top = ranked[:K]  # (K,) row ids, best first
+    free = rows.slot_lo + rows.r_local - rows.n_filled
+    cap = jnp.minimum(jnp.minimum(free, jnp.sum(eligible)), rows.panel_cap)
+    slots = jnp.where(jnp.arange(K) < cap, rows.n_filled + jnp.arange(K), r_total)
+
+    row_idx = ctx.row_idx.at[slots].set(top.astype(jnp.int32), mode="drop")
+    admit_off = rows.admit_off.at[slots].set(off.astype(jnp.int32), mode="drop")
+    # pre-panel sketches of the fresh admits = sketched image of exactly the
+    # missed prefix [seen_lo, off) — the update_r backfill's right-hand side
+    backfill = jnp.zeros_like(rows.backfill).at[slots].set(
+        jnp.take(prev, top, axis=0).astype(rows.backfill.dtype), mode="drop"
+    )
+    rows = dataclasses.replace(
+        rows,
+        row_sketch=row_sketch,
+        backfill=backfill,
+        admit_off=admit_off,
+        gram=gram,
+        gram_pending=gram_pending,
+        n_filled=rows.n_filled + cap.astype(jnp.int32),
+        seen_lo=seen_lo,
+    )
+    return dataclasses.replace(ctx, row_idx=row_idx, rows=rows)
 
 
 def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off):
-    """Score this panel's columns against the admitted basis; admit the top
-    residual columns into free slots of this worker's range."""
+    """Engine hook: score this panel's columns against the admitted basis and
+    admit/evict within this worker's slot range; when rows are adaptive,
+    fold the panel into the row accumulator and admit rows too."""
     L = A_L.shape[1]
-    c_total = C.shape[1]
 
     # Sketched residual against the worker's local slot range. The range is
-    # filled as a zero-suffixed prefix, which keeps the floored triangular
-    # solve in _solve_least_squares an *exact* projection onto the filled
-    # span (trailing all-zero columns contribute nothing).
+    # filled as a zero-suffixed prefix (evictions overwrite in place, never
+    # un-fill), which keeps the floored triangular solve in
+    # _solve_least_squares an *exact* projection onto the filled span
+    # (trailing all-zero columns contribute nothing).
     ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
     X = _solve_least_squares(ScC_local, sc_a)  # (c_local, L)
     resid2 = jnp.sum((sc_a - ScC_local @ X) ** 2, axis=0)  # (L,)
@@ -113,63 +333,147 @@ def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off):
     run_mean = ctx.energy / jnp.maximum(ctx.cols_seen, 1.0)
     thresh = ctx.min_gain * jnp.maximum(run_mean, panel_mean)
     eligible = resid2 > thresh  # strict: zero-padded tail columns never pass
-    # Rank eligible columns by residual energy (ineligible sort last: resid2 ≥ 0 > −1).
-    ranked = jnp.argsort(-jnp.where(eligible, resid2, -1.0))
-    free = ctx.slot_lo + ctx.c_local - ctx.n_filled
-    cap = jnp.minimum(jnp.minimum(free, jnp.sum(eligible)), ctx.panel_cap)
-    slots = jnp.where(jnp.arange(L) < cap, ctx.n_filled + jnp.arange(L), c_total)
 
-    C = C.at[:, slots].set(jnp.take(A_L, ranked, axis=1).astype(C.dtype), mode="drop")
-    ScC = ctx.ScC.at[:, slots].set(jnp.take(sc_a, ranked, axis=1).astype(ctx.ScC.dtype), mode="drop")
-    col_idx = ctx.col_idx.at[slots].set((off + ranked).astype(jnp.int32), mode="drop")
-
+    ctx, C = _admit_or_evict_columns(ctx, C, A_L, sc_a, resid2, eligible, off)
     ctx = dataclasses.replace(
         ctx,
-        ScC=ScC,
-        col_idx=col_idx,
-        n_filled=ctx.n_filled + cap.astype(jnp.int32),
         energy=ctx.energy + jnp.sum(col_energy),
         cols_seen=ctx.cols_seen + jnp.clip(ctx.n - off, 0, L).astype(ctx.cols_seen.dtype),
     )
+    if ctx.rows is not None:
+        ctx = _admit_rows(ctx, A_L, off)
     return ctx, C
 
 
+def _update_r(ctx: AdaptiveCURCtx, R, A_L, off):
+    """Engine ``update_r`` hook: write the panel block for the current
+    (post-admission) ``row_idx`` — unfilled slots stay zero — then backfill
+    the missed column prefix of any row admitted *this* panel from its
+    sketched reconstruction ``x = S_preᵀ (S_pre S_preᵀ + λI)⁻¹ y``, where
+    ``S_pre`` is ``S_R`` masked to the columns this worker has already
+    consumed and ``y`` the per-slot pre-panel sketch kept in
+    ``rows.backfill``."""
+    blk = jnp.take(A_L, jnp.clip(ctx.row_idx, 0), axis=0)
+    blk = jnp.where((ctx.row_idx >= 0)[:, None], blk, jnp.zeros((), blk.dtype))
+    R = jax.lax.dynamic_update_slice_in_dim(R, blk.astype(R.dtype), off, axis=1)
+    rows = ctx.rows
+    if rows is None:
+        return R
+
+    fresh = (rows.admit_off == off) & (ctx.row_idx >= 0)  # admitted this panel
+
+    def do_backfill(R):
+        # G = S_pre S_preᵀ is pre-accumulated window-by-window (rows.gram);
+        # only the map back to columns needs the materialized prefix window.
+        G = rows.gram  # (s_r, s_r) PSD Gram of the prefix [seen_lo, off)
+        lam = 1e-6 * jnp.trace(G) / G.shape[0] + jnp.finfo(jnp.float32).tiny
+        Z = jnp.linalg.solve(G + lam * jnp.eye(G.shape[0], dtype=G.dtype),
+                             rows.backfill.T.astype(jnp.float32))  # (s_r, r)
+        col_ids = jnp.arange(R.shape[1])
+        mask = (col_ids >= rows.seen_lo) & (col_ids < off)  # backfillable prefix
+        Sm = ctx.S_R.materialize().astype(jnp.float32) * mask[None, :]
+        Xb = (Sm.T @ Z).T  # (r, n_pad) min-norm row reconstructions
+        keep = fresh[:, None] & mask[None, :]
+        return jnp.where(keep, Xb.astype(R.dtype), R)
+
+    return jax.lax.cond(jnp.any(fresh), do_backfill, lambda R: R, R)
+
+
+# ---------------------------------------------------------------------------
+# distributed hooks (disjoint-slot semantics; see repro.stream.distributed)
+# ---------------------------------------------------------------------------
+
+
 def _prep_shard(ctx: AdaptiveCURCtx, num_workers: int) -> AdaptiveCURCtx:
+    """Static per-run shard prep: split the column (and row) slot budgets
+    into ``/W`` per-worker ranges; raises when a budget doesn't divide."""
     if ctx.c_local % num_workers:
         raise ValueError(
             f"column budget c={ctx.c_local} must divide across {num_workers} workers"
         )
-    return dataclasses.replace(ctx, c_local=ctx.c_local // num_workers)
+    rows = ctx.rows
+    if rows is not None:
+        if rows.r_local % num_workers:
+            raise ValueError(
+                f"row budget r={rows.r_local} must divide across {num_workers} workers"
+            )
+        rows = dataclasses.replace(rows, r_local=rows.r_local // num_workers)
+    return dataclasses.replace(ctx, c_local=ctx.c_local // num_workers, rows=rows)
 
 
 def _bind_shard(ctx: AdaptiveCURCtx, w) -> AdaptiveCURCtx:
+    """Bind worker ``w`` (may be traced) to its disjoint slot ranges."""
     lo = (w * ctx.c_local).astype(jnp.int32)
-    return dataclasses.replace(ctx, slot_lo=lo, n_filled=lo)
+    rows = ctx.rows
+    if rows is not None:
+        lo_r = (w * rows.r_local).astype(jnp.int32)
+        rows = dataclasses.replace(rows, slot_lo=lo_r, n_filled=lo_r)
+    return dataclasses.replace(ctx, slot_lo=lo, n_filled=lo, rows=rows)
 
 
 def _merge_ctx(ctxs):
+    """In-process merge of per-worker ctxs: slot ranges are disjoint, so the
+    per-slot state sums exactly; ``row_sketch`` sums to the full-stream
+    ``A S_Rᵀ`` because workers consumed disjoint column ranges."""
     base = ctxs[0]
+    rows = None
+    if base.rows is not None:
+        rows = dataclasses.replace(
+            base.rows,
+            row_sketch=sum((c.rows.row_sketch for c in ctxs[1:]), base.rows.row_sketch),
+            backfill=jnp.zeros_like(base.rows.backfill),  # per-panel scratch
+            gram=jnp.zeros_like(base.rows.gram),  # worker-local prefix state
+            gram_pending=jnp.zeros_like(base.rows.gram_pending),
+            admit_off=jnp.max(jnp.stack([c.rows.admit_off for c in ctxs]), axis=0),
+            n_filled=sum((c.rows.n_filled - c.rows.slot_lo) for c in ctxs).astype(jnp.int32),
+            slot_lo=jnp.zeros((), jnp.int32),
+            seen_lo=jnp.zeros((), jnp.int32),
+            r_local=base.row_idx.shape[0],
+        )
     return dataclasses.replace(
         base,
         ScC=sum((c.ScC for c in ctxs[1:]), base.ScC),  # slot ranges are disjoint
         col_idx=jnp.max(jnp.stack([c.col_idx for c in ctxs]), axis=0),  # −1 = unfilled
+        row_idx=jnp.max(jnp.stack([c.row_idx for c in ctxs]), axis=0),
+        slot_score=sum((c.slot_score for c in ctxs[1:]), base.slot_score),
         n_filled=sum((c.n_filled - c.slot_lo) for c in ctxs).astype(jnp.int32),
         slot_lo=jnp.zeros((), jnp.int32),
         energy=sum(c.energy for c in ctxs),
         cols_seen=sum(c.cols_seen for c in ctxs),
+        n_evicted=sum(c.n_evicted for c in ctxs).astype(jnp.int32),
+        rows=rows,
         c_local=base.col_idx.shape[0],
     )
 
 
 def _collective_ctx(ctx: AdaptiveCURCtx, axis) -> AdaptiveCURCtx:
+    """shard_map all-reduce mirror of :func:`_merge_ctx` (psum for the
+    disjoint per-slot state, pmax for −1-sentinel index maps)."""
+    rows = ctx.rows
+    if rows is not None:
+        rows = dataclasses.replace(
+            rows,
+            row_sketch=jax.lax.psum(rows.row_sketch, axis),
+            backfill=jnp.zeros_like(rows.backfill),
+            gram=jnp.zeros_like(rows.gram),  # worker-local prefix state
+            gram_pending=jnp.zeros_like(rows.gram_pending),
+            admit_off=jax.lax.pmax(rows.admit_off, axis),
+            n_filled=jax.lax.psum(rows.n_filled - rows.slot_lo, axis).astype(jnp.int32),
+            slot_lo=jnp.zeros((), jnp.int32),
+            seen_lo=jnp.zeros((), jnp.int32),
+        )
     return dataclasses.replace(
         ctx,
         ScC=jax.lax.psum(ctx.ScC, axis),
         col_idx=jax.lax.pmax(ctx.col_idx, axis),
+        row_idx=jax.lax.pmax(ctx.row_idx, axis),
+        slot_score=jax.lax.psum(ctx.slot_score, axis),
         n_filled=jax.lax.psum(ctx.n_filled - ctx.slot_lo, axis).astype(jnp.int32),
         slot_lo=jnp.zeros((), jnp.int32),
         energy=jax.lax.psum(ctx.energy, axis),
         cols_seen=jax.lax.psum(ctx.cols_seen, axis),
+        n_evicted=jax.lax.psum(ctx.n_evicted, axis).astype(jnp.int32),
+        rows=rows,
     )
 
 
@@ -177,7 +481,7 @@ ADAPTIVE_CUR_OPS = PanelOps(
     name="adaptive_cur",
     core_sketches=_core_sketches,
     update_c=_update_c,
-    r_block=_r_block,
+    update_r=_update_r,
     prep_shard=_prep_shard,
     bind_shard=_bind_shard,
     merge_ctx=_merge_ctx,
@@ -190,8 +494,9 @@ def adaptive_cur_init(
     m: int,
     n: int,
     c: int,
-    row_idx: jax.Array,
+    row_idx: Optional[jax.Array] = None,
     *,
+    r: Optional[int] = None,
     s_c: Optional[int] = None,
     s_r: Optional[int] = None,
     eps: float = 0.05,
@@ -200,23 +505,67 @@ def adaptive_cur_init(
     osnap_p: int = 2,
     min_gain: float = 2.0,
     panel_cap: Optional[int] = None,
+    swap_gain: Optional[float] = None,
+    min_gain_rows: Optional[float] = None,
+    panel_cap_rows: Optional[int] = None,
     dtype=jnp.float32,
     sketches=None,
     panel: Optional[int] = None,
 ) -> PanelState:
     """Allocate an adaptive streaming-CUR state with an empty column budget.
 
-    ``c`` slots are filled in-stream by residual admission; ``row_idx`` stays
-    fixed (row selection is a ROADMAP follow-up). ``panel_cap`` defaults to
-    ``max(1, c // 8)`` so the budget survives past the first panels;
-    ``min_gain`` is the data-relative admission threshold (a column must
-    carry ``min_gain×`` the mean column energy *outside* the current basis).
-    Pass ``panel=`` to pre-pad ``R``/``S_R`` for ragged-tail zero padding.
+    Args:
+        key: PRNG key for the core sketches (ignored when ``sketches`` given).
+        m, n: stream shape — ``A`` is (m, n), arriving as column panels.
+        c: column budget; slots are filled in-stream by residual admission.
+        row_idx: fixed pre-pass row indices (r,). Pass ``None`` together with
+            ``r=`` to enable adaptive in-stream **row admission** instead.
+        r: row budget when ``row_idx is None`` (adaptive rows).
+        s_c, s_r: core sketch sizes; default to the Table-2
+            :func:`repro.cur.cur.cur_sketch_sizes` for ``(c, r, eps, rho_est)``.
+        eps, rho_est: Table-2 sketch-size parameters.
+        sketch: column-sliceable core sketch family
+            (``countsketch`` / ``osnap`` / ``gaussian``).
+        osnap_p: nonzeros per column for the OSNAP family.
+        min_gain: data-relative column admission threshold — a column must
+            carry ``min_gain ×`` the mean column energy *outside* the current
+            admitted basis.
+        panel_cap: max column admissions (or evictions) per panel; defaults
+            to ``max(1, c // 8)`` so the budget survives past the first panels.
+        swap_gain: **eviction** threshold — once the budget is full, an
+            eligible candidate evicts the weakest admitted slot when its
+            residual clears ``swap_gain ×`` that slot's retained-energy
+            score. ``None`` (default) disables eviction (v1 admission-only).
+        min_gain_rows: row admission threshold (default: ``min_gain``) — a
+            row must carry ``min_gain_rows ×`` the mean per-row sketch energy
+            outside the admitted row span.
+        panel_cap_rows: max row admissions per panel (default ``max(1, r//8)``).
+        dtype: accumulator dtype.
+        sketches: optional pre-drawn ``(S_C, S_R)`` pair (shared randomness).
+        panel: fixed streaming panel width — pre-pads ``R``/``S_R`` so ragged
+            tails can be zero-padded exactly (see :mod:`repro.stream.engine`).
+
+    Returns:
+        A :class:`~repro.stream.engine.PanelState` wired to
+        :data:`ADAPTIVE_CUR_OPS`; drive it with ``stream_panels`` /
+        ``simulate_sharded_stream`` / ``mesh_sharded_stream`` and finish with
+        :func:`adaptive_cur_finalize`.
     """
     from ..cur.cur import cur_sketch_sizes  # lazy: repro.cur imports repro.stream
 
-    row_idx = jnp.asarray(row_idx, jnp.int32)
-    r = row_idx.shape[0]
+    adaptive_rows = row_idx is None
+    if adaptive_rows:
+        if r is None:
+            raise ValueError("pass `row_idx` (fixed rows) or `r=` (adaptive rows)")
+        row_idx_arr = jnp.full((r,), -1, jnp.int32)
+    else:
+        if r is not None:
+            raise ValueError(
+                "`r=` is the adaptive-row budget and requires `row_idx=None`; "
+                "with fixed `row_idx` the budget is its length"
+            )
+        row_idx_arr = jnp.asarray(row_idx, jnp.int32)
+        r = row_idx_arr.shape[0]
     n_pad = padded_n(n, panel) if panel else n
     if sketches is None:
         sizes = cur_sketch_sizes(c, r, eps=eps, rho=rho_est)
@@ -230,17 +579,40 @@ def adaptive_cur_init(
         s_c, s_r = S_C.s, S_R.s
     S_R.cols(0, 1)  # fail fast on non-sliceable families
     S_R = S_R.pad_cols(n_pad)
+    rows = None
+    if adaptive_rows:
+        rows = AdaptiveRowState(
+            row_sketch=jnp.zeros((m, s_r), jnp.float32),
+            backfill=jnp.zeros((r, s_r), jnp.float32),
+            admit_off=jnp.full((r,), -1, jnp.int32),
+            gram=jnp.zeros((s_r, s_r), jnp.float32),
+            gram_pending=jnp.zeros((s_r, s_r), jnp.float32),
+            n_filled=jnp.zeros((), jnp.int32),
+            slot_lo=jnp.zeros((), jnp.int32),
+            min_gain=jnp.asarray(
+                min_gain if min_gain_rows is None else min_gain_rows, jnp.float32
+            ),
+            seen_lo=jnp.full((), -1, jnp.int32),
+            r_local=r,
+            panel_cap=panel_cap_rows if panel_cap_rows is not None else max(1, r // 8),
+        )
     ctx = AdaptiveCURCtx(
         col_idx=jnp.full((c,), -1, jnp.int32),
-        row_idx=row_idx,
+        row_idx=row_idx_arr,
         S_C=S_C,
         S_R=S_R,
         ScC=jnp.zeros((s_c, c), dtype),
+        slot_score=jnp.zeros((c,), jnp.float32),
         n_filled=jnp.zeros((), jnp.int32),
         slot_lo=jnp.zeros((), jnp.int32),
         energy=jnp.zeros((), jnp.float32),
         cols_seen=jnp.zeros((), jnp.float32),
         min_gain=jnp.asarray(min_gain, jnp.float32),
+        swap_gain=jnp.asarray(
+            jnp.inf if swap_gain is None else swap_gain, jnp.float32
+        ),
+        n_evicted=jnp.zeros((), jnp.int32),
+        rows=rows,
         c_local=c,
         panel_cap=panel_cap if panel_cap is not None else max(1, c // 8),
         n=n,
@@ -257,15 +629,25 @@ def adaptive_cur_init(
 
 
 def adaptive_cur_finalize(state: PanelState):
-    """Fast-GMR core solve on the admitted columns; unfilled slots (zero
-    columns of C) get zeroed core rows so they cannot inject the floored
-    solve's large-but-finite garbage into downstream consumers."""
+    """Fast-GMR core solve on the admitted columns/rows.
+
+    Unfilled slots (zero columns of ``C`` / zero rows of ``R``) get zeroed
+    core rows/columns so they cannot inject the floored solve's
+    large-but-finite garbage into downstream consumers.
+
+    Returns:
+        A :class:`~repro.cur.cur.CURResult`; ``col_idx``/``row_idx`` hold
+        the admitted (post-eviction) index sets with −1 in unfilled slots.
+    """
     from ..cur.cur import CURResult  # lazy: repro.cur imports repro.stream
 
     ctx = state.ctx
     R = truncated_R(state)
     RSr = ctx.S_R.apply_t(R)  # (r, s_r)
     U = fast_gmr_core(ctx.ScC, state.M, RSr)  # ScC ≡ S_C C by construction
-    filled = ctx.col_idx >= 0
-    U = jnp.where(filled[:, None], U, jnp.zeros((), U.dtype))
+    filled_c = ctx.col_idx >= 0
+    U = jnp.where(filled_c[:, None], U, jnp.zeros((), U.dtype))
+    if ctx.rows is not None:
+        filled_r = ctx.row_idx >= 0
+        U = jnp.where(filled_r[None, :], U, jnp.zeros((), U.dtype))
     return CURResult(C=state.C, U=U, R=R, col_idx=ctx.col_idx, row_idx=ctx.row_idx)

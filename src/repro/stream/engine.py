@@ -63,8 +63,19 @@ class PanelOps:
     # ``sc_a = S_C @ A_L`` is pre-computed by the engine (shared with the M
     # update) so residual-scoring policies get it for free.
     update_c: Callable[..., tuple]
-    # (ctx, A_L, off) -> (r, L) block written into R[:, off:off+L].
-    r_block: Callable[..., jax.Array]
+    # (ctx, A_L, off) -> (r, L) block written into R[:, off:off+L]. May be
+    # omitted when update_r (below) is provided instead.
+    r_block: Optional[Callable[..., jax.Array]] = None
+    # Optional full-control R update: (ctx, R, A_L, off) -> R'. When set it
+    # REPLACES the r_block/dynamic_update_slice path, so applications that
+    # must write outside the current panel window — e.g. adaptive row
+    # admission backfilling a late-admitted row's column prefix from its
+    # sketched reconstruction (repro.stream.adaptive) — can do so. The hook
+    # receives the post-update_c ctx, so per-panel admission decisions made
+    # in update_c are visible. Must be jit-traceable and must only *add*
+    # information at columns < off + L (the single-pass contract: future
+    # columns have not been seen).
+    update_r: Optional[Callable] = None
     # Optional distributed hooks (see repro.stream.distributed):
     # prep_shard(ctx, num_workers) -> ctx   — static, once per run (meta edits)
     # bind_shard(ctx, w) -> ctx             — per worker, w may be traced
@@ -74,6 +85,15 @@ class PanelOps:
     bind_shard: Optional[Callable] = None
     merge_ctx: Optional[Callable] = None
     collective_ctx: Optional[Callable] = None
+
+    def __post_init__(self):
+        """Fail fast at construction: the R update must come from exactly
+        one of ``r_block`` / ``update_r`` (a missing hook would otherwise
+        surface as an opaque NoneType call inside the jitted step)."""
+        if (self.r_block is None) == (self.update_r is None):
+            raise ValueError(
+                f"PanelOps {self.name!r} needs exactly one of r_block / update_r"
+            )
 
 
 @dataclasses.dataclass
@@ -135,8 +155,11 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
     M = state.M + S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
 
     ctx, C = ops.update_c(state.ctx, state.C, A_L, sc_a, off)
-    r_blk = ops.r_block(ctx, A_L, off).astype(state.R.dtype)
-    R = jax.lax.dynamic_update_slice_in_dim(state.R, r_blk, off, axis=1)
+    if ops.update_r is not None:
+        R = ops.update_r(ctx, state.R, A_L, off)
+    else:
+        r_blk = ops.r_block(ctx, A_L, off).astype(state.R.dtype)
+        R = jax.lax.dynamic_update_slice_in_dim(state.R, r_blk, off, axis=1)
 
     return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L, ctx=ctx)
 

@@ -193,6 +193,29 @@ def scenario_stream_sharded_equals_single():
     recon = np.asarray(res.C) @ np.asarray(res.U) @ np.asarray(res.R)
     rel = np.linalg.norm(np.asarray(B) - recon) / np.linalg.norm(np.asarray(B))
     assert np.isfinite(rel) and rel < 0.5, rel
+
+    # v2 parity (acceptance): eviction + adaptive row admission under
+    # shard_map at 2 and 4 workers — disjoint per-worker slot ranges psum
+    # into a valid, finite factorization that still captures the spikes
+    from repro.data.synthetic import spiked_rows_matrix
+
+    D, rpos = spiked_rows_matrix(jax.random.key(6), m, n)
+    for W in (2, 4):
+        mesh_w = Mesh(np.array(jax.devices()[:W]), ("data",))
+        st2 = adaptive_cur_init(
+            jax.random.key(7), m, n, 8, None, r=8, sketch="countsketch",
+            panel=panel, panel_cap=1, panel_cap_rows=1, swap_gain=2.0,
+        )
+        res2 = adaptive_cur_finalize(mesh_sharded_stream(st2, D, panel, mesh_w))
+        recon2 = np.asarray(res2.C) @ np.asarray(res2.U) @ np.asarray(res2.R)
+        rel2 = np.linalg.norm(np.asarray(D) - recon2) / np.linalg.norm(np.asarray(D))
+        assert np.isfinite(rel2) and rel2 < 1.0, (W, rel2)
+        admitted_r = set(np.asarray(res2.row_idx).tolist())
+        missed_r = set(np.asarray(rpos).tolist()) - admitted_r
+        assert len(missed_r) <= 2, (W, sorted(admitted_r), np.asarray(rpos).tolist())
+        ci = np.asarray(res2.col_idx)
+        filled = ci[ci >= 0]
+        assert len(np.unique(filled)) == len(filled), (W, ci)
     print("OK scenario_stream_sharded_equals_single")
 
 

@@ -71,6 +71,74 @@ def test_select_rows_matches_transposed_columns(A):
 
 
 # ---------------------------------------------------------------------------
+# selection edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_select_columns_rejects_c_beyond_n():
+    """The budget is clamped by validation, not silently wrapped: c > n (and
+    c ≤ 0) raise instead of sampling out-of-range indices."""
+    A = powerlaw_matrix(jax.random.key(30), 20, 10, 1.0)
+    with pytest.raises(ValueError, match="0 < c <= n"):
+        select_columns(jax.random.key(31), A, 11, "uniform")
+    with pytest.raises(ValueError, match="0 < c <= n"):
+        select_columns(jax.random.key(31), A, 0, "uniform")
+    # k beyond min(m, n) is clamped, not an error (full-subspace leverage)
+    sel = select_columns(jax.random.key(32), A, 5, "leverage", k=999)
+    assert sel.idx.shape == (5,) and len(np.unique(np.asarray(sel.idx))) == 5
+
+
+@pytest.mark.parametrize("policy", ["leverage", "approx_leverage"])
+def test_sketched_leverage_on_degenerate_spectrum_stays_distinct(policy):
+    """Rank-1 input concentrates the (sketched) leverage distribution on a
+    single direction — sampling without replacement must still return c
+    distinct, in-range indices even when most probabilities are ~0."""
+    u = jax.random.normal(jax.random.key(33), (60, 1))
+    v = jnp.zeros((40, 1)).at[7, 0].set(1.0)
+    A = (u @ v.T) + 1e-6 * jax.random.normal(jax.random.key(34), (60, 40))
+    sel = select_columns(jax.random.key(35), A, 6, policy, k=1)
+    idx = np.asarray(sel.idx)
+    assert len(np.unique(idx)) == 6, idx
+    assert np.all((idx >= 0) & (idx < 40))
+    assert 7 in idx.tolist()  # the support column is (near-)surely kept
+
+
+def test_duplicate_indices_keep_fast_cur_finite():
+    """Sketched-leverage sampling *with replacement* (or a user-fed index
+    list) can hand fast_cur duplicated columns; the floored core solve must
+    absorb the rank deficiency instead of producing NaN/inf."""
+    A = powerlaw_matrix(jax.random.key(36), 80, 60, 1.0)
+    ci = jnp.asarray([3, 3, 17, 17, 41, 5], jnp.int32)  # deliberate duplicates
+    ri = jnp.asarray([2, 9, 9, 30, 55, 55], jnp.int32)
+    res = fast_cur(jax.random.key(37), A, col_idx=ci, row_idx=ri, sketch="countsketch")
+    # The guarantee is *finiteness* (sign-preserving absolute floor in
+    # _solve_least_squares), not accuracy: exactly-duplicated columns make
+    # the core solve rank-deficient, so U is non-unique.
+    assert bool(jnp.all(jnp.isfinite(res.U)))
+    np.testing.assert_array_equal(res.C, jnp.take(A, ci, axis=1))
+    np.testing.assert_array_equal(res.R, jnp.take(A, ri, axis=0))
+    assert bool(jnp.all(jnp.isfinite(cur_reconstruct(res))))
+
+
+def test_pivoted_qr_rank_deficient_input():
+    """Greedy pivoted QR asked for more columns than the numerical rank:
+    the taken-mask must keep indices distinct (deflation residues would
+    otherwise be re-picked) and the early picks must cover the true rank."""
+    k1, k2 = jax.random.split(jax.random.key(38))
+    L = jax.random.normal(k1, (50, 3))
+    Rf = jax.random.normal(k2, (3, 30))
+    A = L @ Rf  # exact rank 3, no noise
+    sel = select_columns(jax.random.key(39), A, 8, "pivoted_qr")
+    idx = np.asarray(sel.idx)
+    assert len(np.unique(idx)) == 8, idx
+    assert np.all((idx >= 0) & (idx < 30))
+    # the first 3 picks span the column space: projecting A onto them is exact
+    C = np.asarray(A)[:, idx[:3]]
+    proj = C @ np.linalg.lstsq(C, np.asarray(A), rcond=None)[0]
+    np.testing.assert_allclose(proj, np.asarray(A), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
 # sketch sizes (Table 2 + ρ branch)
 # ---------------------------------------------------------------------------
 
