@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all smoke bench docs-check
+.PHONY: test test-slow test-all smoke bench docs-check perf-check
 
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
@@ -20,6 +20,10 @@ test-all:  ## both lanes
 smoke:  ## quick benchmark artifacts (CI)
 	$(PY) -m benchmarks.cur_decomp --smoke
 	$(PY) -m benchmarks.stream_bench --smoke
+
+perf-check:  ## regenerate the smoke stream bench and gate vs benchmarks/baselines/
+	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/perf-check
+	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_stream.json
 
 bench:  ## full benchmark harness, CSV on stdout
 	$(PY) -m benchmarks.run

@@ -1,0 +1,149 @@
+"""Perf-regression gate: fresh ``BENCH_stream.json`` vs committed baseline.
+
+Compares every *timed* row (``us_per_call > 0``; derived-only rows — win
+ratios, parity deltas — carry 0.0 and are skipped) of a freshly generated
+benchmark artifact against the committed snapshot under
+``benchmarks/baselines/`` and fails (exit 1) when any row regresses by more
+than ``--threshold`` (default 1.5×).
+
+By default rows are **host-normalized** before comparison: each side's
+rows are divided by that side's median timed row, so a CI runner that is
+uniformly 2× slower (or faster) than the machine that produced the
+baseline neither fails every row nor masks a real one — what the gate
+detects is a row regressing relative to its peers (a de-optimized code
+path), which is host-invariant. ``--absolute`` compares raw wall-times
+instead (meaningful when fresh and baseline come from the same machine,
+e.g. ``make perf-check`` on the dev container after regenerating the
+baseline there).
+
+Rows present on only one side are reported but do not fail the gate
+(scenarios may be added/renamed); a smoke artifact is only comparable to
+the smoke baseline (different shapes), so mismatched ``meta.smoke`` flags
+are an error.
+
+Wired into ``make perf-check`` and the CI workflow (after the benchmark
+smokes). Regenerate the baselines intentionally with::
+
+  PYTHONPATH=src python -m benchmarks.stream_bench --out-dir benchmarks/baselines
+  PYTHONPATH=src python -m benchmarks.stream_bench --smoke --out-dir /tmp/smoke \
+      && python -m benchmarks.check_regression --update-smoke-baseline /tmp/smoke/BENCH_stream.json
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.check_regression --fresh BENCH_stream.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _timed_rows(artifact: dict) -> dict:
+    return {
+        row["name"]: float(row["us_per_call"])
+        for row in artifact["rows"]
+        if float(row.get("us_per_call", 0.0)) > 0.0
+    }
+
+
+def baseline_path_for(artifact: dict) -> str:
+    """The committed snapshot matching the artifact's smoke/full flavour."""
+    smoke = bool(artifact.get("meta", {}).get("smoke", False))
+    name = "BENCH_stream.smoke.json" if smoke else "BENCH_stream.json"
+    return os.path.join(BASELINE_DIR, name)
+
+
+def _median(values) -> float:
+    vals = sorted(values)
+    k = len(vals) // 2
+    return vals[k] if len(vals) % 2 else 0.5 * (vals[k - 1] + vals[k])
+
+
+def compare(fresh: dict, baseline: dict, threshold: float, absolute: bool = False) -> list:
+    """Return a list of violation strings (empty = gate passes)."""
+    if bool(fresh["meta"].get("smoke")) != bool(baseline["meta"].get("smoke")):
+        return [
+            "smoke/full mismatch: fresh smoke="
+            f"{fresh['meta'].get('smoke')} vs baseline smoke={baseline['meta'].get('smoke')}"
+        ]
+    fresh_rows, base_rows = _timed_rows(fresh), _timed_rows(baseline)
+    shared = sorted(set(fresh_rows) & set(base_rows))
+    # host-speed normalizer: each side's median timed row (over shared rows)
+    scale = 1.0
+    if not absolute and shared:
+        f_med = _median([fresh_rows[n] for n in shared])
+        b_med = _median([base_rows[n] for n in shared])
+        if f_med > 0 and b_med > 0:
+            scale = b_med / f_med
+            print(f"  host normalizer: fresh median {f_med:.1f}us vs baseline "
+                  f"median {b_med:.1f}us (x{1/scale:.2f} host speed)")
+    violations = []
+    for name in shared:
+        ratio = fresh_rows[name] * scale / base_rows[name]
+        status = "FAIL" if ratio > threshold else "ok"
+        print(
+            f"  {status:>4}  {name}: {fresh_rows[name]:.1f}us vs baseline "
+            f"{base_rows[name]:.1f}us ({ratio:.2f}x normalized)"
+        )
+        if ratio > threshold:
+            violations.append(f"{name}: {ratio:.2f}x > {threshold}x")
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        print(f"  new   {name}: {fresh_rows[name]:.1f}us (no baseline)")
+    for name in sorted(set(base_rows) - set(fresh_rows)):
+        print(f"  gone  {name}: baseline-only row")
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default="BENCH_stream.json", help="freshly generated artifact")
+    ap.add_argument("--baseline", default=None, help="override the committed snapshot path")
+    ap.add_argument("--threshold", type=float, default=1.5, help="max allowed fresh/baseline ratio")
+    ap.add_argument(
+        "--absolute", action="store_true",
+        help="compare raw wall-times (same-host runs) instead of host-normalized rows",
+    )
+    ap.add_argument(
+        "--update-smoke-baseline", metavar="ARTIFACT", default=None,
+        help="copy ARTIFACT over the committed smoke baseline and exit",
+    )
+    args = ap.parse_args()
+    if args.update_smoke_baseline:
+        os.makedirs(BASELINE_DIR, exist_ok=True)
+        dst = os.path.join(BASELINE_DIR, "BENCH_stream.smoke.json")
+        shutil.copy(args.update_smoke_baseline, dst)
+        print(f"updated {dst}")
+        return 0
+    fresh = _load(args.fresh)
+    baseline_path = args.baseline or baseline_path_for(fresh)
+    if not os.path.exists(baseline_path):
+        print(f"check_regression: no baseline at {baseline_path} — failing (commit one)")
+        return 1
+    baseline = _load(baseline_path)
+    print(
+        f"check_regression: {args.fresh} vs {baseline_path} (threshold {args.threshold}x, "
+        f"{'absolute' if args.absolute else 'host-normalized'})"
+    )
+    violations = compare(fresh, baseline, args.threshold, absolute=args.absolute)
+    if violations:
+        print(f"check_regression: {len(violations)} perf regression(s)")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    print("check_regression: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

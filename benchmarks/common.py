@@ -63,6 +63,40 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     return float(np.median(ts))
 
 
+def time_calls_interleaved(fns: dict, warmup: int = 1, rounds: int = 7) -> dict:
+    """Best (min) wall-time in µs per named thunk, interleaved in a
+    **randomized order per round** (seeded — reproducible).
+
+    Timing the configurations of a comparison back-to-back (all iterations
+    of A, then all of B) folds ambient drift — CPU frequency, container
+    neighbours, allocator state — into the *difference* being measured.
+    Interleaving one iteration of every configuration per round exposes
+    each to the same drift. The per-round order is a fresh seeded
+    permutation rather than a fixed cycle: a fixed cycle gives every
+    config a *constant predecessor*, and the tail of the predecessor's
+    call (async deallocation, cache displacement) lands on the successor's
+    timer — a persistent few-percent adjacency bias that min-of-rounds
+    cannot remove because it is systematic, not noise (observed as
+    byte-identical programs timing 2–4% apart). Random permutations make
+    predecessors uniform, so the per-config min over enough rounds is
+    order-unbiased and identical workloads measure equal.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    items = list(fns.items())
+    rounds = max(rounds, 2 * len(items))
+    rng = np.random.default_rng(0)
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for j in rng.permutation(len(items)):
+            name, fn = items[j]
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[name] = min(best[name], (time.perf_counter() - t0) * 1e6)
+    return best
+
+
 def clustered_points(key, n: int, d: int, n_clusters: int = 10, spread: float = 1.0):
     """Clustered Gaussian data for RBF kernels (§6.2 datasets substitution)."""
     k1, k2, k3 = jax.random.split(key, 3)

@@ -14,7 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref
+from repro.kernels import (
+    countsketch_apply,
+    countsketch_ref,
+    panel_score,
+    panel_score_ref,
+    twoside_sketch,
+    twoside_sketch_ref,
+)
 
 from .common import time_call
 
@@ -23,6 +30,24 @@ def _traffic_model(m, n, s_c, s_r, dtype_bytes=2):
     fused = (m * n + m * s_c + n * s_r + s_c * s_r) * dtype_bytes
     sequential = (m * n + m * s_c + 2 * s_c * n + n * s_r + s_c * s_r) * dtype_bytes
     return fused, sequential
+
+
+def _panel_score_traffic(s_c, m, L, c, block_l=128, dtype_bytes=4):
+    """HBM bytes: fused kernel vs the unfused three-op evaluation.
+
+    Unfused: sc_a = S_C·A_L is written to HBM once and read back twice (the
+    energy reduction and the Qᵀ·sc_a projection). Fused: the (s_c, bl) tile
+    never leaves VMEM between the matmul and the two reductions — sc_a is
+    written exactly once as an output and the extra traffic is just the
+    (8, L) stats row. The fused side does re-fetch the S_C stripe once per
+    L-block (its block index varies along the m-reduction, so it cannot
+    stay resident across j sweeps — ``s_c·m·ceil(L/bl)`` bytes, matching
+    the kernel docstring's traffic formula); A_L tiles and Q are read once.
+    """
+    l_sweeps = -(-L // block_l)
+    fused = (m * L + s_c * m * l_sweeps + s_c * c + s_c * L + 8 * L) * dtype_bytes
+    unfused = (m * L + s_c * m + s_c * c + 3 * s_c * L + c * L + 2 * L) * dtype_bytes
+    return fused, unfused
 
 
 def run(trials: int = 3, quick: bool = False) -> list:
@@ -47,6 +72,39 @@ def run(trials: int = 3, quick: bool = False) -> list:
             "us_per_call": round(us_ref, 1),
             "derived": f"pallas_rel_err={rel:.2e};hbm_fused={fused/1e6:.1f}MB;"
                        f"hbm_seq={seq/1e6:.1f}MB;traffic_save={seq/fused:.2f}x",
+        })
+
+    # Fused panel-scoring kernel (adaptive streaming CUR hot path): interpret
+    # mode executes the kernel body for correctness; the XLA wall-time of the
+    # unfused three-op reference is the deployable CPU fallback, and the
+    # traffic model is what decides the TPU win (memory-bound regime).
+    ps_shapes = [(240, 2048, 128, 16)] if quick else [
+        (240, 1024, 128, 16),
+        (240, 2048, 128, 16),
+        (512, 4096, 256, 32),
+    ]
+    for s_c, m, L, c in ps_shapes:
+        ks = jax.random.split(jax.random.key(2), 3)
+        Sc = jax.random.normal(ks[0], (s_c, m), jnp.float32)
+        A_L = jax.random.normal(ks[1], (m, L), jnp.float32)
+        Q, _ = jnp.linalg.qr(jax.random.normal(ks[2], (s_c, c), jnp.float32))
+        Qm = Q * (jnp.arange(c) < max(1, c // 2))  # half-filled admitted basis
+        sc_a, r2, en = panel_score(Sc, A_L, Qm, interpret=True)
+        sc_ref, r2_ref, en_ref = panel_score_ref(Sc, A_L, Qm)
+        scale = float(jnp.max(jnp.abs(en_ref)))
+        rel = max(
+            float(jnp.max(jnp.abs(sc_a - sc_ref)) / jnp.max(jnp.abs(sc_ref))),
+            float(jnp.max(jnp.abs(r2 - r2_ref))) / scale,
+            float(jnp.max(jnp.abs(en - en_ref))) / scale,
+        )
+        us_ref = time_call(jax.jit(panel_score_ref), Sc, A_L, Qm)
+        fused, unfused = _panel_score_traffic(s_c, m, L, c)
+        rows.append({
+            "name": f"kernel/panel_score/{s_c}x{m}x{L}_c{c}",
+            "us_per_call": round(us_ref, 1),
+            "derived": f"pallas_rel_err={rel:.2e};hbm_fused={fused/1e6:.1f}MB;"
+                       f"hbm_unfused={unfused/1e6:.1f}MB;traffic_save={unfused/fused:.2f}x;"
+                       f"sc_a_hbm_roundtrips=0vs2",
         })
 
     cs_shapes = [(256, 4096, 1024)] if quick else [(128, 2048, 512), (256, 4096, 1024), (512, 8192, 2048)]

@@ -45,14 +45,23 @@ from .common import (
     late_spike_matrix,
     spiked_decay_matrix,
     spiked_rows_matrix,
-    time_call,
+    time_calls_interleaved,
     write_bench_json,
 )
 
 
 def _stream(state, A, panel, workers):
-    if workers == 1:
-        return stream_panels(state, A, panel)
+    """Every worker count — including w1 — runs the same sharded driver
+    (one fused program either way), so the w-scaling rows measure what the
+    driver actually costs per worker count. Note what that means per
+    method: for *fixed-uniform* (hook-less ops) the fused driver provably
+    chains the contiguous worker partition into the single-host scan, so
+    its w1/w2/w4 rows execute the same program — equal rows are the
+    *result* of that optimization (the pre-PR4 per-worker dispatch loop is
+    what made w2/w4 ≥ 2× slower), not evidence of parallel speedup. The
+    *adaptive* rows keep genuinely divergent per-worker admission state +
+    in-program merge. Real multi-device execution (`mesh_sharded_stream`)
+    is exercised for parity in the slow test lane, not timed here."""
     return simulate_sharded_stream(state, A, panel, workers)
 
 
@@ -66,13 +75,27 @@ def _win_row(name: str, lose_err: float, win_err: float, label: str) -> dict:
 
 
 def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
-    """PR-2 scenario kept intact: admission vs fixed-uniform at equal c."""
+    """PR-2 scenario kept intact: admission vs fixed-uniform at equal c.
+
+    Timing methodology (perf acceptance rows): every (method, workers)
+    configuration of a shape is timed **interleaved** (one call per config
+    per round, min over rounds — see
+    :func:`benchmarks.common.time_calls_interleaved`) so the
+    adaptive-vs-fixed and w4-vs-w1 comparisons are not polluted by ambient
+    drift between sequentially-timed rows.
+    """
     rows = []
     c = r = 16
     for m, n, panel in shapes:
+        # Wider panels than the adversarial-stream scenarios: the adaptive
+        # policy pays a per-panel constant (whitened-basis solve + admission
+        # chain), so fewer, larger panels amortize it; panel_cap scales up
+        # so the admission budget per column stays the same.
+        panel, panel_cap = 2 * panel, 4
         A, pos = spiked_decay_matrix(jax.random.key(m + n), m, n)
         ri = select_rows(jax.random.key(1), A, r, "uniform").idx
         errs = {}
+        stats = {}
         for workers in (1, 2, 4):
             for method in ("fixed-uniform", "adaptive"):
                 per_trial = []
@@ -88,36 +111,52 @@ def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
                     else:
                         st = adaptive_cur_init(
                             jax.random.key(200 + t), m, n, c, ri,
-                            sketch="countsketch", panel=panel, panel_cap=2,
+                            sketch="countsketch", panel=panel, panel_cap=panel_cap,
                         )
                         res = adaptive_cur_finalize(_stream(st, A, panel, workers))
                         admitted_spikes.append(
                             len(set(np.asarray(pos).tolist()) & set(np.asarray(res.col_idx).tolist()))
                         )
                     per_trial.append(float(cur_relative_error(A, res)))
-                rel = float(np.mean(per_trial))
-                errs[(method, workers)] = rel
+                errs[(method, workers)] = float(np.mean(per_trial))
+                stats[(method, workers)] = admitted_spikes
 
-                def once(method=method, workers=workers):
-                    if method == "fixed-uniform":
-                        ci = jax.random.choice(jax.random.key(100), n, (c,), replace=False)
-                        st = streaming_cur_init(
-                            jax.random.key(200), m, n, ci, ri, sketch="countsketch", panel=panel
-                        )
-                        return streaming_cur_finalize(_stream(st, A, panel, workers)).U
-                    st = adaptive_cur_init(
-                        jax.random.key(200), m, n, c, ri,
-                        sketch="countsketch", panel=panel, panel_cap=2,
-                    )
-                    return adaptive_cur_finalize(_stream(st, A, panel, workers)).U
+        # Timed calls are end-to-end (init + stream + finalize) with the init
+        # compiled in the closure: fewer host dispatches per call → a much
+        # tighter min-floor on a noisy shared-CPU container.
+        ci0 = jax.random.choice(jax.random.key(100), n, (c,), replace=False)
+        fixed_init = jax.jit(lambda key: streaming_cur_init(
+            key, m, n, ci0, ri, sketch="countsketch", panel=panel))
+        adapt_init = jax.jit(lambda key: adaptive_cur_init(
+            key, m, n, c, ri, sketch="countsketch", panel=panel, panel_cap=panel_cap))
 
-                us = time_call(once, warmup=1, iters=1 if quick else 2)
+        def once(method, workers):
+            if method == "fixed-uniform":
+                st = fixed_init(jax.random.key(200))
+                return streaming_cur_finalize(_stream(st, A, panel, workers)).U
+            st = adapt_init(jax.random.key(200))
+            return adaptive_cur_finalize(_stream(st, A, panel, workers)).U
+
+        # Cyclic measurement order keeps each w's fixed/adaptive pair and the
+        # w4/w1 fixed pair adjacent, so sustained contention windows hit both
+        # sides of every compared pair; rotation + min handles the rest.
+        fns = {
+            (method, workers): (lambda method=method, workers=workers: once(method, workers))
+            for workers in (4, 1, 2)
+            for method in ("fixed-uniform", "adaptive")
+        }
+        # rounds stretch the session across several contention cycles of the
+        # shared container, so every config touches its true floor
+        times = time_calls_interleaved(fns, warmup=1, rounds=6 if quick else 100)
+        for workers in (1, 2, 4):
+            for method in ("fixed-uniform", "adaptive"):
+                rel = errs[(method, workers)]
                 derived = f"rel_err={rel:.4f};c={c};panel={panel}"
                 if method == "adaptive":
-                    derived += f";spikes_admitted={np.mean(admitted_spikes):.1f}/{len(pos)}"
+                    derived += f";spikes_admitted={np.mean(stats[(method, workers)]):.1f}/{len(pos)}"
                 rows.append({
                     "name": f"stream/cur/{m}x{n}/{method}/w{workers}",
-                    "us_per_call": round(us, 1),
+                    "us_per_call": round(times[(method, workers)], 1),
                     "derived": derived,
                     "_rel_err": rel,
                 })

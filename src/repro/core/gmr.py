@@ -11,11 +11,14 @@
   of ``max{c/√ε, c/(ε ρ²)}`` the sketch-size bound takes.
 * :func:`error_ratio` — the §6.1 evaluation metric.
 
-Sketched pseudo-inverse solves are performed in fp32 (or better) via QR
-least-squares (`jnp.linalg.lstsq`), never by materializing pinv of a tall
-matrix — the sketched operands are (s_c × c) / (r × s_r), so this is the
-O(s_c c² + s_r r²) cost of Theorem 1 with better conditioning than normal
-equations.
+Sketched pseudo-inverse solves are performed in fp32 (or better) by
+Householder QR with a sign-preserving absolute floor on the R diagonal
+(:func:`_solve_least_squares` — *not* ``jnp.linalg.lstsq``, whose SVD-based
+rank handling is slower and NaNs on all-zero operands), never by
+materializing pinv of a tall matrix — the sketched operands are
+(s_c × c) / (r × s_r), so this is the O(s_c c² + s_r r²) cost of Theorem 1
+with better conditioning than normal equations. See the
+:func:`_solve_least_squares` docstring for the floor's numerical contract.
 """
 
 from __future__ import annotations
@@ -31,7 +34,30 @@ __all__ = ["exact_gmr", "fast_gmr", "fast_gmr_core", "rho", "error_ratio", "sket
 
 
 def _solve_least_squares(B: jax.Array, Y: jax.Array) -> jax.Array:
-    """argmin_X ||B X − Y||_F for tall ``B`` via QR (fp32 accumulate)."""
+    """argmin_X ||B X − Y||_F for tall ``B`` via Householder QR, fp32+.
+
+    Numerical contract (the "sign-preserving absolute floor"):
+
+    * ``R``'s diagonal entries are replaced by
+      ``sign(d) · max(|d|, floor)`` with
+      ``floor = max(eps·max|d|·k, sqrt(tiny))`` — a *relative* rank floor
+      (`eps·max|d|·k`, the usual lstsq/pinv cutoff) backed by an *absolute*
+      one (`sqrt(tiny) ≈ 1e-19` in fp32) so the triangular solve's pivots
+      are nonzero even when the whole operand is zero.
+    * Output is therefore always **finite**: against an O(1) RHS a floored
+      pivot yields entries up to O(1/floor) ≈ 1e19, inside fp32 range. No
+      NaN/Inf is ever produced (all-zero sketched blocks from CountSketch
+      collisions, unfilled streaming slots).
+    * When ``B``'s nonzero columns form a well-conditioned prefix followed
+      by all-zero columns (the streaming engines' zero-suffixed-slot
+      invariant), the floored rows multiply those zero columns, so
+      ``B @ X`` is the **exact projection** of ``Y`` onto the filled span —
+      garbage rows of ``X`` cannot leak into the residual. Consumers that
+      use ``X`` itself (not ``B @ X``) must mask unfilled slots, as
+      ``adaptive_cur_finalize`` does.
+    * The floor preserves the pivot's sign, so the solution varies
+      continuously as a pivot crosses zero (no sign flip at ±floor).
+    """
     dt = jnp.promote_types(B.dtype, jnp.float32)
     Q, Rf = jnp.linalg.qr(B.astype(dt))
     # Solve R X = Qᵀ Y. Guard rank deficiency with a sign-preserving absolute

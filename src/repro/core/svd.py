@@ -15,10 +15,12 @@ O((m+n)k/ε) footprint of Theorem 4; the input panels are never retained.
 The per-panel accumulator mechanics live in the shared
 :mod:`repro.stream.engine` (``PanelState`` + ``SP_SVD_OPS``); this module
 keeps the Algorithm-3 surface as thin wrappers. ``fast_sp_svd`` streams
-through the engine's module-scope jitted step — one trace per shape, with
-the ragged tail zero-padded to the panel width (exact: ``pad_cols`` sketch
-windows past ``n`` are zero-scaled). DP-sharded ingestion comes for free via
-:mod:`repro.stream.distributed`.
+through the engine's scan-compiled whole-stream path — one ``lax.scan``
+program per (shape, panel) with the carried state's buffers donated, the
+ragged tail zero-padded to the panel width (exact: ``pad_cols`` sketch
+windows past ``n`` are zero-scaled), and the per-panel jitted step
+available behind ``jit="per-panel"`` for parity checks. DP-sharded
+ingestion comes for free via :mod:`repro.stream.distributed`.
 """
 
 from __future__ import annotations
@@ -201,16 +203,20 @@ def fast_sp_svd(
     sizes: Optional[dict] = None,
     panel: int = 512,
     fixed_rank: Optional[int] = None,
+    jit="scan",
 ):
     """One-shot Algorithm 3: stream ``A`` through the panel loop internally.
 
-    Every panel — including a ragged tail, zero-padded to ``panel`` — goes
-    through the engine's module-scope jitted step: one trace per (m, panel)
-    shape for the process lifetime.
+    The stream runs on the engine's scan-compiled path by default — the
+    whole panel loop is one compiled program per (m, n, panel) shape for the
+    process lifetime, with every panel (including a ragged tail, zero-padded
+    to ``panel``) consumed in place. ``jit="per-panel"`` falls back to one
+    jitted dispatch per panel (the parity oracle; see
+    :func:`repro.stream.stream_panels`).
     """
     m, n = A.shape
     state = sp_svd_init(key, m, n, k=k, eps=eps, sizes=sizes, dtype=A.dtype, panel=panel)
-    state = stream_panels(state, A, panel)
+    state = stream_panels(state, A, panel, jit=jit)
     return sp_svd_finalize(state, k=fixed_rank)
 
 

@@ -11,8 +11,13 @@ vmap/jit-friendly and fast:
   into a batched fused product routed through the
   ``repro.kernels.ops.twoside_sketch`` Pallas kernel (one HBM pass over
   each ``A_b``; `jax.vmap` lifts the kernel grid over the batch).
-* **Per-item uniform selection** via `vmap` over folded keys — selection
-  stays O(1) and independent across users.
+* **Per-item selection** via `vmap` over folded keys — independent across
+  users. ``selection="uniform"`` stays O(1) per draw;
+  ``selection="approx_leverage"`` vmaps the sketched-leverage policy of
+  :mod:`repro.cur.selection` (CountSketch → small SVD → subspace leverage
+  scores → weighted sampling without replacement) over the batch, per item
+  for both columns and rows — the quality policy at serving shapes, still
+  one device dispatch.
 
 ``batched_fast_cur(...)`` ≡ a python loop of :func:`repro.cur.fast_cur`
 with the same shared sketches and per-item indices (tested), but executes
@@ -30,6 +35,7 @@ from ..core.gmr import fast_gmr_core
 from ..core.sketching import GaussianSketch
 from ..kernels.ops import twoside_sketch
 from .cur import CURResult, cur_sketch_sizes
+from .selection import select_columns, select_rows
 
 __all__ = ["batched_fast_cur", "draw_shared_sketches"]
 
@@ -57,6 +63,8 @@ def batched_fast_cur(
     rho_est: float = 2.0,
     sketches: Optional[Tuple[GaussianSketch, GaussianSketch]] = None,
     use_kernel: Optional[bool] = None,
+    selection: str = "uniform",
+    k: Optional[int] = None,
 ) -> CURResult:
     """Fast CUR of a stack ``A (B, m, n)`` in one dispatch.
 
@@ -65,9 +73,21 @@ def batched_fast_cur(
     Pallas kernel on TPU and through XLA einsum elsewhere (on CPU the
     kernel would run in slow interpret mode; on GPU the Mosaic kernel
     cannot lower at all).
+
+    ``selection`` picks the per-item index policy: ``"uniform"`` (O(1)
+    draws) or ``"approx_leverage"`` — the sketched rank-``k`` leverage
+    policy of :func:`repro.cur.selection.select_columns`, vmapped over the
+    batch with per-item folded keys for both the column and the row draw
+    (``k`` defaults to the budget, as in the one-shot policy). Identical to
+    a python loop of the one-shot policy per item (same keys ⇒ same
+    indices), but batched into the single dispatch.
     """
     if A.ndim != 3:
         raise ValueError(f"expected A of shape (B, m, n), got {A.shape}")
+    if selection not in ("uniform", "approx_leverage"):
+        raise ValueError(
+            f"selection must be 'uniform' or 'approx_leverage', got {selection!r}"
+        )
     B, m, n = A.shape
     use_kernel = (jax.default_backend() == "tpu") if use_kernel is None else use_kernel
 
@@ -81,13 +101,23 @@ def batched_fast_cur(
 
     sel_keys = jax.random.split(k_sel, B)
 
-    def pick(k):
-        k_c, k_r = jax.random.split(k)
-        ci = jax.random.choice(k_c, n, (c,), replace=False).astype(jnp.int32)
-        ri = jax.random.choice(k_r, m, (r,), replace=False).astype(jnp.int32)
-        return ci, ri
+    if selection == "uniform":
 
-    col_idx, row_idx = jax.vmap(pick)(sel_keys)  # (B, c), (B, r)
+        def pick(kk, a):
+            k_c, k_r = jax.random.split(kk)
+            ci = jax.random.choice(k_c, n, (c,), replace=False).astype(jnp.int32)
+            ri = jax.random.choice(k_r, m, (r,), replace=False).astype(jnp.int32)
+            return ci, ri
+
+    else:  # per-item sketched-leverage (ROADMAP open item)
+
+        def pick(kk, a):
+            k_c, k_r = jax.random.split(kk)
+            ci = select_columns(k_c, a, c, "approx_leverage", k=k).idx
+            ri = select_rows(k_r, a, r, "approx_leverage", k=k).idx
+            return ci, ri
+
+    col_idx, row_idx = jax.vmap(pick)(sel_keys, A)  # (B, c), (B, r)
 
     C = jax.vmap(lambda a, ci: jnp.take(a, ci, axis=1))(A, col_idx)  # (B, m, c)
     R = jax.vmap(lambda a, ri: jnp.take(a, ri, axis=0))(A, row_idx)  # (B, r, n)

@@ -15,7 +15,10 @@ Memory: C (m·c) + R (r·n) + M (s_c·s_r) — the factors themselves plus a
 constant-size core sketch; ``finalize`` then runs the Fast-GMR core solve.
 Because ``Σ_L S_C A_L S_R[:,cols]ᵀ = S_C A S_Rᵀ`` exactly, the finalized
 factors match one-shot :func:`repro.cur.fast_cur` on identical sketches up
-to fp32 summation order (tested in ``tests/test_cur.py``).
+to fp32 summation order (tested in ``tests/test_cur.py``). Drive the state
+with :func:`repro.stream.stream_panels` — scan-compiled by default (one
+program per chunk, donated buffers), with the per-panel jitted step behind
+``jit="per-panel"``.
 
 This module keeps *fixed* pre-pass indices (uniform, or scores from a prior
 epoch / sketched estimate). For residual-driven in-stream column
@@ -34,7 +37,14 @@ import jax.numpy as jnp
 
 from ..core.gmr import fast_gmr_core
 from ..core.sketching import draw_sketch
-from ..stream.engine import PanelOps, PanelState, padded_n, panel_update, truncated_R
+from ..stream.engine import (
+    PanelOps,
+    PanelState,
+    fresh_pytree,
+    padded_n,
+    panel_update,
+    truncated_R,
+)
 from .cur import CURResult, cur_sketch_sizes
 
 __all__ = [
@@ -132,8 +142,10 @@ def streaming_cur_init(
         accumulators, ready for :func:`streaming_cur_update` /
         :func:`repro.stream.stream_panels`.
     """
-    col_idx = jnp.asarray(col_idx, jnp.int32)
-    row_idx = jnp.asarray(row_idx, jnp.int32)
+    # Copies, not views: the scan path donates the state's buffers, and a
+    # zero-copy asarray would hand the caller's own arrays to the donor.
+    col_idx = jnp.array(col_idx, jnp.int32)
+    row_idx = jnp.array(row_idx, jnp.int32)
     c, r = col_idx.shape[0], row_idx.shape[0]
     if sketches is None:
         sizes = cur_sketch_sizes(c, r, eps=eps, rho=rho_est)
@@ -143,7 +155,7 @@ def streaming_cur_init(
         S_C = draw_sketch(k_sc, sketch, s_c, m, p=osnap_p, dtype=dtype)
         S_R = draw_sketch(k_sr, sketch, s_r, n, p=osnap_p, dtype=dtype)
     else:
-        S_C, S_R = sketches
+        S_C, S_R = fresh_pytree(sketches)  # donation-safe copies
         s_c, s_r = S_C.s, S_R.s
     S_R.cols(0, 1)  # fail fast on non-sliceable families (srht / sampling)
     n_pad = padded_n(n, panel) if panel else n
@@ -183,3 +195,8 @@ def streaming_cur_finalize(state: StreamingCURState) -> CURResult:
     RSr = ctx.S_R.apply_t(R)  # (r, s_r)
     U = fast_gmr_core(ScC, state.M, RSr)
     return CURResult(C=state.C, U=U, R=R, col_idx=ctx.col_idx, row_idx=ctx.row_idx)
+
+
+# Compiled at module scope (one trace per shape); the state is NOT donated —
+# callers inspect it after finalizing.
+streaming_cur_finalize = jax.jit(streaming_cur_finalize)

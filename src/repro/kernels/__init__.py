@@ -2,6 +2,15 @@
 
 twoside_sketch — fused S_C·A·S_Rᵀ (Algorithm 1/3 inner sketch)
 countsketch    — TPU-adapted input-sparsity CountSketch (one-hot MXU matmul)
+panel_score    — fused streaming panel scoring: S_C·A_L + column energies +
+                 admitted-basis residuals in one VMEM pass (adaptive CUR)
 Each has a pure-jnp oracle in ref.py; ops.py holds the jit'd wrappers.
 """
-from .ops import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref
+from .ops import (
+    countsketch_apply,
+    countsketch_ref,
+    panel_score,
+    panel_score_ref,
+    twoside_sketch,
+    twoside_sketch_ref,
+)

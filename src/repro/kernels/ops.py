@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from .countsketch import countsketch_kernel
-from .ref import countsketch_ref, twoside_sketch_ref
+from .panel_score import panel_score_kernel
+from .ref import countsketch_ref, panel_score_ref, twoside_sketch_ref
 from .twoside_sketch import twoside_sketch_kernel
 
 
@@ -85,9 +86,44 @@ def countsketch_apply(
     return out[:s, : n]
 
 
+@partial(jax.jit, static_argnames=("block_m", "block_l", "interpret"))
+def panel_score(
+    sc: jax.Array,
+    a_l: jax.Array,
+    q: jax.Array,
+    *,
+    block_m: int = 256,
+    block_l: int = 128,
+    interpret: bool | None = None,
+) -> tuple:
+    """Fused panel scoring: ``(S_C·A_L, resid2, energy)`` in one VMEM pass.
+
+    Shapes: ``sc (s_c, m)``, ``a_l (m, L)``, ``q (s_c, c)`` where ``q`` is
+    a (whitened or orthonormal) basis of the admitted columns' sketches —
+    ``resid2 = energy − ‖qᵀ·‖²`` scores against ``span(q)``; all-zero
+    columns of ``q`` are inert (see ``repro.stream.adaptive``). Returns
+    ``(sc_a (s_c, L), resid2 (L,), energy (L,))`` fp32. Zero-padding every
+    dim to its block multiple is mathematically a no-op for all three
+    outputs.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    s_c, m = sc.shape
+    L = a_l.shape[1]
+    c = q.shape[1]
+    scp = _pad_to(sc, (8, block_m))
+    ap = _pad_to(a_l, (block_m, block_l))
+    qp = _pad_to(q, (8, 128))
+    sc_a, stats = panel_score_kernel(
+        scp, ap, qp, block_m=block_m, block_l=block_l, interpret=interpret
+    )
+    return sc_a[:s_c, :L], stats[0, :L], stats[1, :L]
+
+
 __all__ = [
     "twoside_sketch",
     "countsketch_apply",
+    "panel_score",
     "twoside_sketch_ref",
     "countsketch_ref",
+    "panel_score_ref",
 ]

@@ -16,3 +16,19 @@ def countsketch_ref(hashes: jax.Array, signs: jax.Array, a: jax.Array, s: int) -
     """Signed segment-sum (the CPU input-sparsity algorithm)."""
     signed = a.astype(jnp.float32) * signs.astype(jnp.float32)[:, None]
     return jax.ops.segment_sum(signed, hashes, num_segments=s)
+
+
+def panel_score_ref(sc: jax.Array, a_l: jax.Array, q: jax.Array) -> tuple:
+    """Unfused three-op oracle for the panel-scoring kernel.
+
+    ``sc_a = S_C A_L``, per-column energies, and projection residuals
+    against the zero-masked orthonormal basis ``q`` — each op a separate
+    HBM round-trip over ``sc_a`` (the traffic the fused kernel removes).
+    Returns ``(sc_a, resid2, energy)`` in fp32.
+    """
+    dt = jnp.float32
+    sc_a = sc.astype(dt) @ a_l.astype(dt)  # (s_c, L)
+    energy = jnp.sum(sc_a * sc_a, axis=0)  # (L,)
+    t = q.astype(dt).T @ sc_a  # (c, L)
+    resid2 = jnp.maximum(energy - jnp.sum(t * t, axis=0), 0.0)
+    return sc_a, resid2, energy

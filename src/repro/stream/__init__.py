@@ -11,7 +11,14 @@ contract shared by the paper's streaming applications — single-pass SVD
 * :mod:`~repro.stream.adaptive` — residual-driven streaming CUR v2: column
   admission **and eviction** (``swap_gain`` replacement of the weakest
   admitted slot) plus in-stream row admission with sketched prefix
-  backfill, all scored from the sketches alone.
+  backfill, all scored from the sketches alone — fused per panel through
+  the engine's ``sketch_panel`` hook (Pallas ``panel_score`` kernel on
+  TPU).
+
+The hot path is scan-compiled: :func:`stream_panels` runs each chunk as one
+``lax.scan`` program with donated state buffers (input states are
+*consumed*), and the sharded drivers run as single fused programs — see
+``docs/streaming.md`` §7.
 
 See ``docs/streaming.md`` for the architecture guide and
 ``docs/paper_map.md`` for the paper-equation → code map.
@@ -20,9 +27,12 @@ See ``docs/streaming.md`` for the architecture guide and
 from .engine import (
     PanelOps,
     PanelState,
+    fresh_pytree,
     jitted_panel_update,
     padded_n,
     panel_update,
+    scan_chunk,
+    scan_panels,
     stream_panels,
     truncated_R,
 )
@@ -42,7 +52,8 @@ from .adaptive import (
 
 __all__ = [
     "PanelOps", "PanelState", "panel_update", "jitted_panel_update",
-    "stream_panels", "padded_n", "truncated_R",
+    "stream_panels", "scan_chunk", "scan_panels", "fresh_pytree",
+    "padded_n", "truncated_R",
     "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
     "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "AdaptiveRowState",
     "adaptive_cur_finalize", "adaptive_cur_init",

@@ -10,14 +10,23 @@ single-pass contract is kept.
 
 Column scoring (admission + eviction)
 -------------------------------------
-Per panel the engine already computes ``sc_a = S_C A_L`` for the M update.
-For each panel column ``y = S_C a_j`` we score how much of it lies outside
-the span of the already-admitted (sketched) columns ``S_C C``:
+Scoring is fused with the panel sketch through the engine's
+``sketch_panel`` hook: one pass computes ``sc_a = S_C A_L`` (shared with
+the M update), the per-column energies, and for each panel column
+``y = S_C a_j`` how much of it lies outside the span of the
+already-admitted (sketched) columns ``S_C C``:
 
-    ``score_j = || y − (S_C C)(S_C C)⁺ y ||²``
+    ``score_j = ||y||² − ||Qᵀ y||²``
 
-(the sketched least-squares residual; ``S_C`` preserves these norms to
-(1±ε) by the subspace-embedding property). A column is *admitted* into the
+where ``Q`` is the Gram-whitened basis of the worker's admitted-slot
+sketches (:func:`_whitened_basis` — unfilled slots' zero columns are
+inert) — a λ-regularized projection residual, equal up to the tiny ridge
+to the sketched least-squares residual ``||y − (S_C C)(S_C C)⁺ y||²``
+(``S_C`` preserves these norms to (1±ε) by the subspace-embedding
+property). On TPU the whole
+triple runs as the fused ``repro.kernels.panel_score`` Pallas kernel (one
+VMEM pass instead of three HBM round-trips); elsewhere the same math runs
+as XLA ops on the structured sketch apply. A column is *admitted* into the
 next free ``C`` slot when its score clears ``min_gain ×`` the mean column
 energy — the larger of the running-stream mean and the current panel's mean,
 so noise columns are never "eligible by default" on a cold start — with at
@@ -78,9 +87,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.gmr import _solve_least_squares, fast_gmr_core
-from ..core.sketching import draw_sketch
-from .engine import PanelOps, PanelState, padded_n, truncated_R
+from ..core.gmr import fast_gmr_core
+from ..core.sketching import GaussianSketch, draw_sketch
+from ..kernels.ops import panel_score
+from .engine import PanelOps, PanelState, fresh_pytree, padded_n, truncated_R
 
 __all__ = [
     "AdaptiveCURCtx",
@@ -109,6 +119,12 @@ class AdaptiveRowState:
     of an O(s_r²·n_pad) rebuild per admission; ``gram_pending`` holds the
     current panel's window Gram, folded into ``gram`` at the next panel so
     ``gram`` stays strictly pre-panel when ``_update_r`` consumes it.
+    ``sr_dense`` is the dense ``S_R`` (s_r × n_pad), materialized **once at
+    init** and threaded through the stream — the per-panel window Gram and
+    the backfill's prefix map are dynamic slices of it, replacing the
+    per-panel ``materialize()`` rebuilds that dominated the adaptive-row
+    hot path (a full (s_r, L) scatter every panel plus an (s_r, n_pad)
+    scatter per admission).
     """
 
     row_sketch: jax.Array  # (m, s_r) running A S_Rᵀ over seen columns
@@ -116,6 +132,7 @@ class AdaptiveRowState:
     admit_off: jax.Array  # (r,) int32 admission offset per slot, −1 = unfilled
     gram: jax.Array  # (s_r, s_r) Gram of the S_R windows over [seen_lo, off)
     gram_pending: jax.Array  # (s_r, s_r) current panel's window Gram
+    sr_dense: jax.Array  # (s_r, n_pad) dense S_R, precomputed once at init
     n_filled: jax.Array  # () int32 — next free row slot (worker-local range)
     slot_lo: jax.Array  # () int32 — first row slot this worker may fill
     min_gain: jax.Array  # () f32 — row admission threshold multiplier
@@ -128,7 +145,7 @@ jax.tree_util.register_dataclass(
     AdaptiveRowState,
     data_fields=[
         "row_sketch", "backfill", "admit_off", "gram", "gram_pending",
-        "n_filled", "slot_lo", "min_gain", "seen_lo",
+        "sr_dense", "n_filled", "slot_lo", "min_gain", "seen_lo",
     ],
     meta_fields=["r_local", "panel_cap"],
 )
@@ -155,6 +172,10 @@ class AdaptiveCURCtx:
     c_local: int  # static: number of column slots this worker owns
     panel_cap: int  # static: max column admissions per panel
     n: int  # static: true column count of the stream
+    # static: eviction enabled (swap_gain was given)? Statically known so the
+    # admission-only compile path can use one vectorized scatter per panel
+    # instead of the sequential admit-or-evict chain.
+    evict: bool = False
 
 
 jax.tree_util.register_dataclass(
@@ -164,13 +185,73 @@ jax.tree_util.register_dataclass(
         "n_filled", "slot_lo", "energy", "cols_seen", "min_gain",
         "swap_gain", "n_evicted", "rows",
     ],
-    meta_fields=["c_local", "panel_cap", "n"],
+    meta_fields=["c_local", "panel_cap", "n", "evict"],
 )
 
 
 def _core_sketches(ctx):
     """Engine hook: the (S_C, S_R) pair driving the shared M update."""
     return ctx.S_C, ctx.S_R
+
+
+def _whitened_basis(mat: jax.Array) -> jax.Array:
+    """Gram-whitened basis ``Q = mat·L⁻ᵀ`` with ``LLᵀ = matᵀmat + λI``.
+
+    ``‖Qᵀy‖² = yᵀ mat (matᵀmat + λI)⁻¹ matᵀ y`` is the (λ-regularized)
+    energy of ``y`` inside ``span(mat)``, so ``‖y‖² − ‖Qᵀy‖²`` is the
+    projection residual the admission policy scores with. Two properties
+    make this the right streaming primitive:
+
+    * all-zero columns of ``mat`` (unfilled slots — the zero-suffixed
+      prefix invariant) produce all-zero columns of ``Q``, contributing
+      nothing: no fill-count masking needed, cold start included
+      (``mat = 0`` ⇒ residual = energy exactly);
+    * the factorization is a ``c×c`` Gram + Cholesky + triangular solve —
+      O(s_c·c²) like QR but without the tall-matrix Householder pass,
+      which dominated the per-panel serial latency of the scoring step.
+
+    ``λ = c·eps·tr(G) + tiny`` is sized so the factorization **cannot** go
+    numerically indefinite — the fp32 rounding perturbation of ``G`` is
+    bounded by ``eps·tr(G)`` and LAPACK's potrf needs ≈``c×`` that in
+    min-eigenvalue headroom — so near-duplicate admitted columns (a true
+    rank-deficient Gram) still produce a finite, NaN-free scorer: the
+    no-NaN guarantee the floored-QR path of
+    :func:`repro.core.gmr._solve_least_squares` gave, restated for the
+    Cholesky route. The ridge stays O(1e-6) relative, far below the
+    subspace-embedding noise the scores already carry, and the regularized
+    projection energy is ≤ the exact one, so residuals stay ≥ 0.
+    """
+    dt = jnp.float32
+    M = mat.astype(dt)
+    G = M.T @ M
+    lam = G.shape[0] * jnp.finfo(dt).eps * jnp.trace(G) + jnp.finfo(dt).tiny
+    L = jnp.linalg.cholesky(G + lam * jnp.eye(G.shape[0], dtype=dt))
+    return jax.scipy.linalg.solve_triangular(L, M.T, lower=True).T
+
+
+def _sketch_panel(ctx: AdaptiveCURCtx, A_L, off):
+    """Engine ``sketch_panel`` hook: panel sketch + column scores, fused.
+
+    Computes ``sc_a = S_C A_L`` together with the per-column energies and
+    the residual energies against the worker's admitted basis. On TPU with a
+    dense ``S_C`` the triple is one VMEM pass of the
+    :func:`repro.kernels.ops.panel_score` Pallas kernel (each ``A_L`` tile
+    read once, ``sc_a`` never round-trips through HBM); elsewhere the same
+    math runs as XLA ops over the structured sketch apply. The whitening of
+    the (s_c × c_local) admitted-sketch slice happens outside the kernel —
+    it is O(s_c·c²), independent of the panel.
+    """
+    ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
+    Qm = _whitened_basis(ScC_local)
+    if jax.default_backend() == "tpu" and isinstance(ctx.S_C, GaussianSketch):
+        sc_a, resid2, energy = panel_score(ctx.S_C.mat[:, : A_L.shape[0]], A_L, Qm)
+    else:
+        sc_a = ctx.S_C.apply(A_L)  # (s_c, L)
+        y = sc_a.astype(jnp.float32)
+        energy = jnp.sum(y * y, axis=0)  # (L,)
+        t = Qm.T @ y  # (c_local, L)
+        resid2 = jnp.maximum(energy - jnp.sum(t * t, axis=0), 0.0)
+    return ctx, sc_a, (resid2, energy)
 
 
 # ---------------------------------------------------------------------------
@@ -182,19 +263,40 @@ def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, A_L, sc_a, resid2, eligible,
     """Greedy per-candidate pass over the top-``panel_cap`` residual columns:
     admit into the next free slot while the worker's range has one, else
     evict the weakest admitted slot when the candidate clears ``swap_gain ×``
-    its retained-energy score. Sequential (a ``fori_loop`` of ``panel_cap``
-    scatters) because each decision changes the slot table the next one
-    sees; all shapes stay static via ``mode='drop'`` OOB scatters."""
+    its retained-energy score. With eviction enabled the pass is sequential
+    but statically unrolled (``panel_cap`` scatter chains — each decision
+    changes the slot table the next one sees); admission-only
+    (``ctx.evict`` False) is order-independent within a panel, so it
+    compiles to **one** batched scatter per buffer, identical outcome. All
+    shapes stay static via ``mode='drop'`` OOB scatters."""
     L = A_L.shape[1]
     c_total = C.shape[1]
     K = min(ctx.panel_cap, L)
 
-    order = jnp.argsort(-jnp.where(eligible, resid2, -1.0))  # resid2 ≥ 0 > −1
-    cand = order[:K]  # (K,) panel-column ids, best first
-    cand_res = jnp.take(resid2, cand)
+    # top-K eligible residual columns, best first (resid2 ≥ 0 > −1 mask)
+    cand_res, cand = jax.lax.top_k(jnp.where(eligible, resid2, -1.0), K)
     cand_ok = jnp.take(eligible, cand)
     cand_A = jnp.take(A_L, cand, axis=1)  # (m, K)
     cand_sc = jnp.take(sc_a, cand, axis=1)  # (s_c, K)
+
+    if not ctx.evict:
+        # Vectorized admission: candidate k (already best-first) lands in
+        # slot n_filled + (its rank among the eligible), budget permitting.
+        ranks = jnp.cumsum(cand_ok.astype(jnp.int32)) - 1
+        free = ctx.slot_lo + ctx.c_local - ctx.n_filled
+        admit = cand_ok & (ranks < free)
+        slots = jnp.where(admit, ctx.n_filled + ranks, c_total)  # OOB → drop
+        C = C.at[:, slots].set(cand_A.astype(C.dtype), mode="drop")
+        ctx = dataclasses.replace(
+            ctx,
+            ScC=ctx.ScC.at[:, slots].set(cand_sc.astype(ctx.ScC.dtype), mode="drop"),
+            col_idx=ctx.col_idx.at[slots].set((off + cand).astype(jnp.int32), mode="drop"),
+            slot_score=ctx.slot_score.at[slots].set(
+                cand_res.astype(ctx.slot_score.dtype), mode="drop"
+            ),
+            n_filled=ctx.n_filled + jnp.sum(admit).astype(jnp.int32),
+        )
+        return ctx, C
 
     slot_ids = jnp.arange(c_total)
     in_range = (slot_ids >= ctx.slot_lo) & (slot_ids < ctx.slot_lo + ctx.c_local)
@@ -221,10 +323,14 @@ def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, A_L, sc_a, resid2, eligible,
             n_evicted + swap.astype(jnp.int32),
         )
 
+    # Sequential because each decision changes the slot table the next one
+    # sees; K = panel_cap is a small static constant, so the loop is
+    # UNROLLED into the surrounding scan body (no inner fori_loop) and XLA
+    # fuses the K scatter chains.
     carry = (C, ctx.ScC, ctx.col_idx, ctx.slot_score, ctx.n_filled, ctx.n_evicted)
-    C, ScC, col_idx, slot_score, n_filled, n_evicted = jax.lax.fori_loop(
-        0, K, step, carry
-    )
+    for k in range(K):
+        carry = step(k, carry)
+    C, ScC, col_idx, slot_score, n_filled, n_evicted = carry
     ctx = dataclasses.replace(
         ctx, ScC=ScC, col_idx=col_idx, slot_score=slot_score,
         n_filled=n_filled, n_evicted=n_evicted,
@@ -249,26 +355,29 @@ def _admit_rows(ctx: AdaptiveCURCtx, A_L, off):
     seen_lo = jnp.where(rows.seen_lo < 0, off.astype(jnp.int32), rows.seen_lo)
     # Rotate the prefix Gram: fold the previous panel's window in, stash the
     # current one — ``gram`` must cover exactly [seen_lo, off) when the
-    # update_r backfill consumes it later this panel.
-    Sw = window.materialize().astype(jnp.float32)  # (s_r, L)
+    # update_r backfill consumes it later this panel. The window is a
+    # dynamic slice of the init-time dense S_R — no per-panel scatter.
+    Sw = jax.lax.dynamic_slice_in_dim(rows.sr_dense, off, L, axis=1)  # (s_r, L)
     gram = rows.gram + rows.gram_pending
     gram_pending = Sw @ Sw.T
 
     # Residual of every row's sketch against the admitted-row span, with the
     # basis gathered *live* from the accumulator (always-fresh sketches).
-    # Like the column path's ScC slice, the basis is restricted to this
-    # worker's slot range: its range is filled as a zero-suffixed prefix,
-    # which keeps the floored triangular solve an exact projection onto the
-    # filled span (a full-table gather would interleave other ranges'
-    # leading zero columns and break that invariant under sharding).
+    # Like the column path, the basis is restricted to this worker's slot
+    # range and projected through a zero-masked orthonormal basis: the range
+    # is filled as a zero-suffixed prefix, so ``Q[:, :filled]`` spans it
+    # exactly (a full-table gather would interleave other ranges' leading
+    # zero columns and break that invariant under sharding).
     row_idx_local = jax.lax.dynamic_slice_in_dim(
         ctx.row_idx, rows.slot_lo, rows.r_local, axis=0
     )
     filled = row_idx_local >= 0
     basis = jnp.take(row_sketch, jnp.clip(row_idx_local, 0), axis=0)  # (r_local, s_r)
     basis = jnp.where(filled[:, None], basis, jnp.zeros((), basis.dtype))
-    X = _solve_least_squares(basis.T, row_sketch.T)  # (r_local, m)
-    resid2 = jnp.sum((row_sketch.T - basis.T @ X) ** 2, axis=0)  # (m,)
+    Qm = _whitened_basis(basis.T)  # (s_r, r_local); unfilled rows self-mask
+    t = row_sketch.astype(jnp.float32) @ Qm  # (m, r_local)
+    row_energy = jnp.sum(row_sketch * row_sketch, axis=1)  # (m,)
+    resid2 = jnp.maximum(row_energy - jnp.sum(t * t, axis=1), 0.0)  # (m,)
 
     # Threshold: min_gain_rows × the current mean per-row sketch energy.
     # Already-admitted rows are excluded outright (their residual is fp
@@ -276,12 +385,11 @@ def _admit_rows(ctx: AdaptiveCURCtx, A_L, off):
     taken = jnp.zeros((m,), bool).at[jnp.where(filled, row_idx_local, m)].set(
         True, mode="drop"
     )
-    mean_energy = jnp.sum(row_sketch * row_sketch) / m
+    mean_energy = jnp.sum(row_energy) / m
     eligible = (resid2 > rows.min_gain * mean_energy) & ~taken
 
     K = min(rows.panel_cap, m)
-    ranked = jnp.argsort(-jnp.where(eligible, resid2, -1.0))
-    top = ranked[:K]  # (K,) row ids, best first
+    _, top = jax.lax.top_k(jnp.where(eligible, resid2, -1.0), K)  # best first
     free = rows.slot_lo + rows.r_local - rows.n_filled
     cap = jnp.minimum(jnp.minimum(free, jnp.sum(eligible)), rows.panel_cap)
     slots = jnp.where(jnp.arange(K) < cap, rows.n_filled + jnp.arange(K), r_total)
@@ -306,20 +414,13 @@ def _admit_rows(ctx: AdaptiveCURCtx, A_L, off):
     return dataclasses.replace(ctx, row_idx=row_idx, rows=rows)
 
 
-def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off):
-    """Engine hook: score this panel's columns against the admitted basis and
-    admit/evict within this worker's slot range; when rows are adaptive,
-    fold the panel into the row accumulator and admit rows too."""
+def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off, scores):
+    """Engine hook: admit/evict this panel's columns within this worker's
+    slot range using the scores pre-computed by the fused ``sketch_panel``
+    pass; when rows are adaptive, fold the panel into the row accumulator
+    and admit rows too."""
     L = A_L.shape[1]
-
-    # Sketched residual against the worker's local slot range. The range is
-    # filled as a zero-suffixed prefix (evictions overwrite in place, never
-    # un-fill), which keeps the floored triangular solve in
-    # _solve_least_squares an *exact* projection onto the filled span
-    # (trailing all-zero columns contribute nothing).
-    ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
-    X = _solve_least_squares(ScC_local, sc_a)  # (c_local, L)
-    resid2 = jnp.sum((sc_a - ScC_local @ X) ** 2, axis=0)  # (L,)
+    resid2, col_energy = scores  # (L,), (L,) — see _sketch_panel
 
     # Admission threshold: min_gain × the mean column energy, where the mean
     # is the larger of the running stream mean and the current panel's mean
@@ -327,7 +428,6 @@ def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off):
     # first panels — with a 0 running mean every noise column would otherwise
     # be "eligible" and greedily exhaust the slot budget before any heavy
     # column arrives.
-    col_energy = jnp.sum(sc_a * sc_a, axis=0)  # (L,)
     true_cols = jnp.clip(ctx.n - off, 1, L).astype(jnp.float32)
     panel_mean = jnp.sum(col_energy) / true_cols
     run_mean = ctx.energy / jnp.maximum(ctx.cols_seen, 1.0)
@@ -371,7 +471,7 @@ def _update_r(ctx: AdaptiveCURCtx, R, A_L, off):
                              rows.backfill.T.astype(jnp.float32))  # (s_r, r)
         col_ids = jnp.arange(R.shape[1])
         mask = (col_ids >= rows.seen_lo) & (col_ids < off)  # backfillable prefix
-        Sm = ctx.S_R.materialize().astype(jnp.float32) * mask[None, :]
+        Sm = rows.sr_dense * mask[None, :]  # dense S_R precomputed at init
         Xb = (Sm.T @ Z).T  # (r, n_pad) min-norm row reconstructions
         keep = fresh[:, None] & mask[None, :]
         return jnp.where(keep, Xb.astype(R.dtype), R)
@@ -480,6 +580,7 @@ def _collective_ctx(ctx: AdaptiveCURCtx, axis) -> AdaptiveCURCtx:
 ADAPTIVE_CUR_OPS = PanelOps(
     name="adaptive_cur",
     core_sketches=_core_sketches,
+    sketch_panel=_sketch_panel,
     update_c=_update_c,
     update_r=_update_r,
     prep_shard=_prep_shard,
@@ -564,7 +665,9 @@ def adaptive_cur_init(
                 "`r=` is the adaptive-row budget and requires `row_idx=None`; "
                 "with fixed `row_idx` the budget is its length"
             )
-        row_idx_arr = jnp.asarray(row_idx, jnp.int32)
+        # Copy, not view: the scan path donates the state's buffers, and a
+        # zero-copy asarray would hand the caller's own array to the donor.
+        row_idx_arr = jnp.array(row_idx, jnp.int32)
         r = row_idx_arr.shape[0]
     n_pad = padded_n(n, panel) if panel else n
     if sketches is None:
@@ -575,7 +678,7 @@ def adaptive_cur_init(
         S_C = draw_sketch(k_sc, sketch, s_c, m, p=osnap_p, dtype=dtype)
         S_R = draw_sketch(k_sr, sketch, s_r, n, p=osnap_p, dtype=dtype)
     else:
-        S_C, S_R = sketches
+        S_C, S_R = fresh_pytree(sketches)  # donation-safe copies
         s_c, s_r = S_C.s, S_R.s
     S_R.cols(0, 1)  # fail fast on non-sliceable families
     S_R = S_R.pad_cols(n_pad)
@@ -587,6 +690,10 @@ def adaptive_cur_init(
             admit_off=jnp.full((r,), -1, jnp.int32),
             gram=jnp.zeros((s_r, s_r), jnp.float32),
             gram_pending=jnp.zeros((s_r, s_r), jnp.float32),
+            # dense S_R once, at init: every per-panel window Gram and every
+            # backfill prefix map is a slice of this — the streaming loop
+            # never materializes a sketch again
+            sr_dense=S_R.materialize().astype(jnp.float32),
             n_filled=jnp.zeros((), jnp.int32),
             slot_lo=jnp.zeros((), jnp.int32),
             min_gain=jnp.asarray(
@@ -616,6 +723,7 @@ def adaptive_cur_init(
         c_local=c,
         panel_cap=panel_cap if panel_cap is not None else max(1, c // 8),
         n=n,
+        evict=swap_gain is not None,
     )
     return PanelState(
         C=jnp.zeros((m, c), dtype),
@@ -651,3 +759,8 @@ def adaptive_cur_finalize(state: PanelState):
         filled_r = ctx.row_idx >= 0
         U = jnp.where(filled_r[None, :], U, jnp.zeros((), U.dtype))
     return CURResult(C=state.C, U=U, R=R, col_idx=ctx.col_idx, row_idx=ctx.row_idx)
+
+
+# Compiled at module scope (one trace per shape); the state is NOT donated —
+# callers inspect it (n_evicted, admit_off, …) after finalizing.
+adaptive_cur_finalize = jax.jit(adaptive_cur_finalize)

@@ -13,12 +13,20 @@ order) by summing the worker accumulators:
 
 Two execution modes share the same math:
 
-* :func:`simulate_sharded_stream` — run the workers sequentially in-process
-  (any device count; what the parity tests and benchmarks use);
+* :func:`simulate_sharded_stream` — run the workers in-process (any device
+  count; what the parity tests and benchmarks use). Default execution is
+  **one compiled program**: every worker's panel range runs as a local
+  ``lax.scan`` (:func:`repro.stream.engine.scan_chunk`) and the merge happens
+  inside the same dispatch, so a W-worker simulation costs one XLA call —
+  the per-worker-per-panel dispatch & re-materialization overhead that used
+  to make w2/w4 *slower* than single-host is gone. The pre-scan per-panel
+  loop is retained behind ``jit="per-panel"`` as the parity oracle.
 * :func:`mesh_sharded_stream` — one ``shard_map`` program over a named mesh
-  axis, panels consumed in a ``fori_loop`` per shard and accumulators
-  all-reduced with ``psum`` at the end (the real multi-device path, exercised
-  by ``tests/multidev_scenario.py`` under forced host devices).
+  axis: each shard scans its whole panel chunk locally, then the
+  accumulators are all-reduced with **one ``psum`` per chunk** (never per
+  panel — collective cadence is per streamed chunk, the real multi-device
+  path, exercised by ``tests/multidev_scenario.py`` under forced host
+  devices).
 
 Application context that *does* diverge across workers (the adaptive-CUR
 admission state) is reconciled through the optional ``PanelOps`` hooks
@@ -28,13 +36,14 @@ admission state) is reconciled through the optional ``PanelOps`` hooks
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import shard_map_compat
-from .engine import PanelState, padded_n, panel_update, stream_panels
+from .engine import PanelState, padded_n, scan_chunk, scan_panels, stream_panels
 
 __all__ = [
     "shard_panel_ranges",
@@ -78,15 +87,100 @@ def merge_states(states: Sequence[PanelState]) -> PanelState:
     )
 
 
+def _scan_range(st: PanelState, A: jax.Array, lo: int, hi: int, panel: int) -> PanelState:
+    """Scan one worker's ``[lo, hi)`` column range (traced; ``st.offset == lo``)."""
+    from .engine import panel_update
+
+    num_panels = padded_n(hi - lo, panel) // panel
+    if hi - lo == num_panels * panel:
+        if num_panels == 1:
+            # single whole panel: no loop machinery, one unrolled step
+            return panel_update(st, jax.lax.dynamic_slice_in_dim(A, lo, panel, axis=1))
+        # aligned range: slice panels out of the shared A — no chunk copy
+        return scan_panels(st, A, num_panels, panel)
+    chunk = jnp.pad(A[:, lo:hi], ((0, 0), (0, num_panels * panel - (hi - lo))))
+    return scan_chunk(st, chunk, panel)
+
+
+@partial(jax.jit, static_argnames=("ranges", "panel"), donate_argnums=(0,))
+def _fused_simulate(state0: PanelState, A: jax.Array, ranges, panel: int) -> PanelState:
+    """One compiled program: every worker's local scan + the merge.
+
+    ``ranges`` is the static per-worker panel partition. Two regimes:
+
+    * **No shard hooks** (fixed-index CUR, SP-SVD): every accumulator update
+      is a running sum or a disjoint slot/block write into zero-init
+      buffers, so per-worker accumulators followed by a merge-sum are
+      *provably identical* to chaining one state through the workers'
+      ranges in order (and the chained fp summation order equals the
+      single-host order exactly). The fused program therefore chains —
+      W-worker simulation costs the single-host stream, no per-worker
+      accumulator materialization, no merge. The un-chained per-worker
+      machinery stays covered by ``jit="per-panel"`` and the mesh path.
+    * **Shard hooks present** (adaptive CUR): only the admission *context*
+      genuinely diverges per worker — the C/R/M accumulators remain
+      disjoint-slot/disjoint-range writes and running sums even under
+      adaptive admission (each worker only ever touches its own slot range
+      and its own column range), so the accumulators chain through the
+      workers exactly like the hook-less case while each worker's ctx
+      starts from its own ``bind_shard`` binding; only the ctxs are merged
+      (``merge_ctx``), with no per-worker accumulator materialization.
+
+    ``state0`` is donated: on backends with buffer donation the fresh
+    accumulators are reused for the output.
+    """
+    ops = state0.ops
+    chainable = (
+        ops.bind_shard is None and ops.merge_ctx is None and ops.collective_ctx is None
+    )
+    if chainable:
+        st = state0
+        if all(a[1] == b[0] for a, b in zip(ranges, ranges[1:])):
+            # contiguous partition (always true for shard_panel_ranges):
+            # chaining collapses to ONE scan over the union range — the
+            # W-worker program IS the single-host program
+            lo, hi = ranges[0][0], ranges[-1][1]
+            if hi > lo:
+                st = dataclasses.replace(st, offset=jnp.asarray(lo, jnp.int32))
+                st = _scan_range(st, A, lo, hi, panel)
+        else:  # pragma: no cover — defensive: non-contiguous custom ranges
+            for lo, hi in ranges:
+                if hi > lo:
+                    st = dataclasses.replace(st, offset=jnp.asarray(lo, jnp.int32))
+                    st = _scan_range(st, A, lo, hi, panel)
+        return dataclasses.replace(st, offset=jnp.asarray(state0.n, jnp.int32))
+    worker_ctxs = []
+    st = state0
+    for w, (lo, hi) in enumerate(ranges):
+        ctx = state0.ctx  # each worker's ctx starts fresh from the prepped base
+        if ops.bind_shard is not None:
+            ctx = ops.bind_shard(ctx, jnp.asarray(w, jnp.int32))
+        # accumulators chain; ctx is swapped per worker
+        st = dataclasses.replace(st, ctx=ctx, offset=jnp.asarray(lo, jnp.int32))
+        if hi > lo:
+            st = _scan_range(st, A, lo, hi, panel)
+        worker_ctxs.append(st.ctx)
+    ctx = ops.merge_ctx(worker_ctxs) if ops.merge_ctx is not None else state0.ctx
+    return dataclasses.replace(
+        st, ctx=ctx, offset=jnp.asarray(state0.n, jnp.int32)
+    )
+
+
 def simulate_sharded_stream(
-    state0: PanelState, A: jax.Array, panel: int, num_workers: int
+    state0: PanelState, A: jax.Array, panel: int, num_workers: int, *, jit="scan"
 ) -> PanelState:
-    """Run ``num_workers`` DP workers sequentially in-process and merge.
+    """Run ``num_workers`` DP workers in-process and merge.
 
     Exact parity with single-host streaming for SP-SVD and fixed-index CUR;
     for adaptive CUR each worker admits into its own slot range (see
     ``repro.stream.adaptive``), so the merged state is a valid — but not
     bitwise-identical — admission outcome.
+
+    ``jit="scan"`` (default) runs all workers *and* the merge as one
+    compiled program (:func:`_fused_simulate` — ``state0`` is consumed, per
+    the engine's donation contract); ``jit="per-panel"`` / ``jit=False``
+    keep the pre-scan driver: one python loop over workers, each worker
+    dispatching per panel — the parity oracle for the scan path.
     """
     if int(state0.offset) != 0:
         raise ValueError(
@@ -99,6 +193,9 @@ def simulate_sharded_stream(
     ctx0 = state0.ctx
     if state0.ops.prep_shard is not None:
         ctx0 = state0.ops.prep_shard(ctx0, num_workers)
+    state0 = dataclasses.replace(state0, ctx=ctx0)
+    if jit in ("scan", True):
+        return _fused_simulate(state0, A, tuple(ranges), panel)
     shards = []
     for w, (lo, hi) in enumerate(ranges):
         ctx = ctx0
@@ -106,7 +203,7 @@ def simulate_sharded_stream(
             ctx = state0.ops.bind_shard(ctx, jnp.asarray(w, jnp.int32))
         st = _worker_state(state0, ctx, lo)
         if hi > lo:
-            st = stream_panels(st, A, panel, stop=hi)
+            st = stream_panels(st, A, panel, stop=hi, jit=jit)
         shards.append(st)
     # NB: every worker starts from state0's zero accumulators, so the merge
     # sum is exact only for a fresh (un-streamed) state0.
@@ -121,7 +218,9 @@ def mesh_sharded_stream(
     axis: str = "data",
 ) -> PanelState:
     """One ``shard_map`` program: shard ``A``'s columns over ``mesh[axis]``,
-    stream panels per shard at global offsets, ``psum`` the accumulators.
+    scan each shard's whole panel chunk locally, ``psum`` the accumulators
+    **once per chunk** (never per panel — the collective cadence is one
+    all-reduce per streamed chunk regardless of panel count).
 
     Requires the (padded) column count to split into whole panels per worker:
     ``n_pad % (W · panel) == 0`` with ``W = mesh.shape[axis]``.
@@ -159,12 +258,7 @@ def mesh_sharded_stream(
         if ops.bind_shard is not None:
             ctx = ops.bind_shard(ctx, w)
         st = dataclasses.replace(state, ctx=ctx, offset=(w * shard_n).astype(jnp.int32))
-
-        def step(i, st):
-            A_L = jax.lax.dynamic_slice_in_dim(A_shard, i * panel, panel, axis=1)
-            return panel_update(st, A_L)
-
-        st = jax.lax.fori_loop(0, shard_n // panel, step, st)
+        st = scan_chunk(st, A_shard, panel)  # local scan; collectives below
         ctx = st.ctx
         if ops.collective_ctx is not None:
             ctx = ops.collective_ctx(ctx, axis)

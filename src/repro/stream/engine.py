@@ -16,16 +16,26 @@ retained, and three accumulators are maintained per panel
 This module owns that contract once. Applications plug in a
 :class:`PanelOps` — three pure functions describing how their ``C``
 contribution and ``R`` block are computed from a panel — and get the shared
-machinery for free: a jit-cached update step (:func:`panel_update` /
-:data:`jitted_panel_update`), zero-padded ragged-tail handling
-(:func:`stream_panels`, exact because ``pad_cols()`` sketch windows past the
-true column count are zero-scaled), and DP-sharded ingestion with exact
-psum/merge finalize (:mod:`repro.stream.distributed`).
+machinery for free: a scan-compiled whole-stream driver
+(:func:`stream_panels`, the default — one ``lax.scan`` program per chunk
+with the input state's buffers donated so C/R/M update in place), a
+jit-cached per-panel step (:func:`panel_update` /
+:data:`jitted_panel_update`, retained behind ``jit="per-panel"`` as the
+parity oracle), zero-padded ragged-tail handling (exact because
+``pad_cols()`` sketch windows past the true column count are zero-scaled),
+and DP-sharded ingestion with exact psum/merge finalize
+(:mod:`repro.stream.distributed`).
 
 Panel width does not change the mathematics: ``Σ_L S_C A_L S_R[:, cols]ᵀ =
 S_C A S_Rᵀ`` exactly, so any panel partition — including the per-worker
 partitions of the distributed path — reproduces the one-shot accumulators up
 to fp32 summation order.
+
+**Donation contract:** the scan path donates the input state's buffers to
+the output state (``donate_argnums``), so a caller must treat
+``stream_panels(state, …)`` as *consuming* ``state`` — keep only the
+returned state. Chunked ingestion (repeated calls on the same logical
+stream) composes naturally: each call consumes the previous call's output.
 """
 
 from __future__ import annotations
@@ -42,7 +52,10 @@ __all__ = [
     "panel_update",
     "jitted_panel_update",
     "stream_panels",
+    "scan_chunk",
+    "scan_panels",
     "padded_n",
+    "fresh_pytree",
     "truncated_R",
 ]
 
@@ -61,8 +74,19 @@ class PanelOps:
     core_sketches: Callable[[Any], tuple]
     # (ctx, C, A_L, sc_a, off) -> (ctx', C'): fold one panel into C.
     # ``sc_a = S_C @ A_L`` is pre-computed by the engine (shared with the M
-    # update) so residual-scoring policies get it for free.
+    # update) so residual-scoring policies get it for free. When
+    # ``sketch_panel`` (below) is set, update_c instead receives a sixth
+    # positional argument — the scores tuple returned by that hook.
     update_c: Callable[..., tuple]
+    # Optional fused panel-sketch hook: (ctx, A_L, off) -> (ctx', sc_a,
+    # scores). When set it REPLACES the engine's own ``S_C.apply(A_L)`` so an
+    # application can compute ``sc_a`` *and* per-column scores in one fused
+    # pass (on TPU, one VMEM pass via the kernels.panel_score Pallas kernel
+    # instead of three HBM round-trips); ``scores`` is forwarded verbatim to
+    # ``update_c`` as its sixth argument. Must be jit-traceable and must
+    # return ``sc_a`` bit-compatible with ``S_C.apply(A_L)``'s contract (it
+    # also feeds the shared M update).
+    sketch_panel: Optional[Callable] = None
     # (ctx, A_L, off) -> (r, L) block written into R[:, off:off+L]. May be
     # omitted when update_r (below) is provided instead.
     r_block: Optional[Callable[..., jax.Array]] = None
@@ -140,6 +164,17 @@ def padded_n(n: int, panel: int) -> int:
     return ((n + panel - 1) // panel) * panel
 
 
+def fresh_pytree(tree):
+    """Deep-copy every array leaf of a pytree.
+
+    Init functions route caller-provided arrays (index sets, shared
+    sketches) through this so the scan path's buffer donation can never
+    invalidate an array the caller still holds."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.array(x) if isinstance(x, jax.Array) else x, tree
+    )
+
+
 def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
     """Consume one L-column panel. jit-compatible (L static per panel width).
 
@@ -151,10 +186,18 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
     ops = state.ops
 
     S_C, S_R = ops.core_sketches(state.ctx)
-    sc_a = S_C.apply(A_L)  # (s_c, L) — shared by the M update and update_c
+    if ops.sketch_panel is not None:
+        # fused path: the application computes sc_a together with its
+        # per-column scores (one pass; see kernels.panel_score on TPU)
+        ctx, sc_a, scores = ops.sketch_panel(state.ctx, A_L, off)
+    else:
+        ctx, sc_a, scores = state.ctx, S_C.apply(A_L), None
     M = state.M + S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
 
-    ctx, C = ops.update_c(state.ctx, state.C, A_L, sc_a, off)
+    if scores is None:
+        ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off)
+    else:
+        ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off, scores)
     if ops.update_r is not None:
         R = ops.update_r(ctx, state.R, A_L, off)
     else:
@@ -166,24 +209,91 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
 
 # Module-scope jit: one trace per (shapes, ops) pair for the whole process —
 # callers that used to rebuild ``jax.jit(update)`` per invocation retraced on
-# every call.
+# every call. Retained as the per-panel parity oracle for the scan path.
 jitted_panel_update = jax.jit(panel_update)
 
 
+def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
+    """Consume a pre-padded chunk (width = whole panels) via one ``lax.scan``.
+
+    Traceable core of the compiled streaming path: the whole chunk becomes a
+    single XLA loop whose carry is the :class:`PanelState`, so the C/R/M
+    buffers update in place across panels instead of being re-materialized
+    at every dispatch boundary. ``A_chunk.shape[1]`` must be a multiple of
+    ``panel`` (callers zero-pad the ragged tail — exact, see
+    :func:`stream_panels`); panels are consumed left-to-right at the state's
+    running offset, bit-for-bit the same per-panel math as
+    :func:`panel_update`. The chunk is indexed *relative* to its own first
+    column — use :func:`scan_panels` when the operand is the full stream
+    array (no chunk copy).
+    """
+    num_panels = A_chunk.shape[1] // panel
+
+    def body(st, t):
+        A_L = jax.lax.dynamic_slice_in_dim(A_chunk, t * panel, panel, axis=1)
+        return panel_update(st, A_L), None
+
+    state, _ = jax.lax.scan(body, state, jnp.arange(num_panels, dtype=jnp.int32))
+    return state
+
+
+def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) -> PanelState:
+    """Scan ``num_panels`` panels of the *full* ``A`` at the state's offset.
+
+    Same loop as :func:`scan_chunk` but sliced at **absolute** offsets
+    (``state.offset + t·panel``), so ``A`` stays a loop-invariant operand
+    and no per-caller chunk copy is ever materialized (the fused
+    sharded-simulate path reads one shared ``A`` for every worker). Caller
+    must guarantee ``offset + num_panels·panel ≤ A.shape[1]`` — ragged
+    tails go through the zero-padded :func:`scan_chunk` path instead.
+    """
+    offs = state.offset + jnp.arange(num_panels, dtype=jnp.int32) * panel
+
+    def body(st, off):
+        A_L = jax.lax.dynamic_slice_in_dim(A, off, panel, axis=1)
+        return panel_update(st, A_L), None
+
+    state, _ = jax.lax.scan(body, state, offs)
+    return state
+
+
+# The compiled whole-stream entry points: one trace per (shapes, panel, ops)
+# for the process lifetime, with the carried state DONATED — on backends
+# with buffer donation the input accumulators are reused for the output, so
+# streaming is allocation-free in steady state. Callers must not reuse the
+# input state afterwards (see module docstring).
+_scan_stream_chunk = jax.jit(scan_chunk, static_argnames="panel", donate_argnums=(0,))
+_scan_stream_panels = jax.jit(
+    scan_panels, static_argnames=("num_panels", "panel"), donate_argnums=(0,)
+)
+
+_JIT_MODES = ("scan", "per-panel", True, False)
+
+
 def stream_panels(
-    state: PanelState, A: jax.Array, panel: int, *, stop: Optional[int] = None, jit: bool = True
+    state: PanelState, A: jax.Array, panel: int, *, stop: Optional[int] = None, jit="scan"
 ) -> PanelState:
     """Drive columns ``[offset, stop)`` of ``A`` through the engine in
     fixed-width panels, zero-padding the ragged tail. Host-side driver:
     ``state.offset`` must be concrete.
 
+    ``jit`` selects the execution strategy:
+
+    * ``"scan"`` (default, also accepts ``True``) — the whole chunk runs as
+      one compiled ``lax.scan`` program (:func:`scan_chunk`) with the input
+      state's buffers donated: no per-panel dispatch, no per-panel
+      accumulator re-materialization. The input ``state`` is *consumed*.
+    * ``"per-panel"`` — one :data:`jitted_panel_update` dispatch per panel
+      (the pre-scan behaviour; kept as the parity oracle).
+    * ``False`` — eager per-panel execution (debugging).
+
     The tail padding is exact — not approximate — because the state's
     sketches were extended with ``pad_cols`` at init: windows past the true
     column count are zero-scaled, and the padded columns of ``A_L`` are zero,
-    so the padded block contributes nothing to C, R or M. The fixed width
-    keeps every call on the single cached trace of
-    :data:`jitted_panel_update`.
+    so the padded block contributes nothing to C, R or M.
     """
+    if jit not in _JIT_MODES:
+        raise ValueError(f"jit must be one of {_JIT_MODES}, got {jit!r}")
     n = A.shape[1]
     start = int(state.offset)
     stop = min(n, state.n) if stop is None else stop
@@ -193,7 +303,18 @@ def stream_panels(
             f"(R width {state.R.shape[1]}, need {start + padded_n(stop - start, panel)}); "
             "pass `panel=` at init"
         )
-    step = jitted_panel_update if jit else panel_update
+    if stop <= start:
+        return state
+    if jit in ("scan", True):
+        width = stop - start
+        num_panels = padded_n(width, panel) // panel
+        if width == num_panels * panel:
+            # aligned: slice panels straight out of the shared A — no copy
+            return _scan_stream_panels(state, A, num_panels=num_panels, panel=panel)
+        chunk = A[:, start:stop]
+        chunk = jnp.pad(chunk, ((0, 0), (0, num_panels * panel - width)))
+        return _scan_stream_chunk(state, chunk, panel=panel)
+    step = jitted_panel_update if jit == "per-panel" else panel_update
     for off in range(start, stop, panel):
         width = min(panel, stop - off)
         A_L = jax.lax.dynamic_slice_in_dim(A, off, width, axis=1)

@@ -5,7 +5,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import countsketch_apply, countsketch_ref, twoside_sketch, twoside_sketch_ref
+from repro.kernels import (
+    countsketch_apply,
+    countsketch_ref,
+    panel_score,
+    panel_score_ref,
+    twoside_sketch,
+    twoside_sketch_ref,
+)
 
 TWOSIDE_SHAPES = [
     (64, 300, 200, 64),  # unaligned m/n → padding path
@@ -74,3 +81,61 @@ def test_twoside_block_shape_sweep():
         out = twoside_sketch(Sc, A, SrT, block_m=bm, block_n=bn, interpret=True)
         # different tilings reorder the fp32 reduction; tolerance scales with |M|
         np.testing.assert_allclose(out, ref, rtol=0, atol=2e-4 * scale)
+
+
+# ---------------------------------------------------------------------------
+# panel_score: fused streaming panel scoring (sc_a + resid2 + energy)
+# ---------------------------------------------------------------------------
+
+PS_SHAPES = [
+    (72, 300, 96, 16),  # every dim unaligned → padding path
+    (240, 1024, 128, 16),  # the adaptive-CUR bench shape
+    (128, 512, 256, 32),  # aligned
+    (64, 130, 40, 8),  # tiny ragged panel
+]
+
+
+@pytest.mark.parametrize("shape", PS_SHAPES)
+def test_panel_score_allclose(shape):
+    s_c, m, L, c = shape
+    ks = jax.random.split(jax.random.key(sum(shape)), 3)
+    Sc = jax.random.normal(ks[0], (s_c, m))
+    A_L = jax.random.normal(ks[1], (m, L))
+    Q, _ = jnp.linalg.qr(jax.random.normal(ks[2], (s_c, c)))
+    Qm = Q * (jnp.arange(c) < max(1, c // 2))
+    sc_a, r2, en = panel_score(Sc, A_L, Qm, interpret=True)
+    sc_ref, r2_ref, en_ref = panel_score_ref(Sc, A_L, Qm)
+    scale = float(jnp.max(en_ref)) + 1e-9
+    np.testing.assert_allclose(sc_a, sc_ref, atol=1e-4 * float(jnp.max(jnp.abs(sc_ref))))
+    np.testing.assert_allclose(r2, r2_ref, atol=2e-4 * scale)
+    np.testing.assert_allclose(en, en_ref, atol=2e-4 * scale)
+
+
+def test_panel_score_empty_and_full_basis():
+    """Unfilled basis ⇒ resid2 == energy; full orthonormal basis that spans
+    the sketch space ⇒ resid2 == 0."""
+    s_c, m, L = 32, 200, 64
+    ks = jax.random.split(jax.random.key(7), 2)
+    Sc = jax.random.normal(ks[0], (s_c, m))
+    A_L = jax.random.normal(ks[1], (m, L))
+    zero_q = jnp.zeros((s_c, 8))
+    _, r2, en = panel_score(Sc, A_L, zero_q, interpret=True)
+    np.testing.assert_allclose(r2, en, rtol=1e-6)
+    full_q = jnp.eye(s_c)  # spans everything
+    _, r2f, enf = panel_score(Sc, A_L, full_q, interpret=True)
+    np.testing.assert_allclose(r2f, jnp.zeros_like(r2f), atol=2e-3 * float(jnp.max(enf)))
+
+
+def test_panel_score_block_shape_sweep():
+    """Grid-decomposition invariance across (block_m, block_l) tilings."""
+    s_c, m, L, c = 128, 512, 256, 16
+    ks = jax.random.split(jax.random.key(11), 3)
+    Sc = jax.random.normal(ks[0], (s_c, m))
+    A_L = jax.random.normal(ks[1], (m, L))
+    Q, _ = jnp.linalg.qr(jax.random.normal(ks[2], (s_c, c)))
+    _, r2_ref, en_ref = panel_score_ref(Sc, A_L, Q)
+    scale = float(jnp.max(en_ref))
+    for bm, bl in [(128, 128), (256, 128), (512, 256)]:
+        _, r2, en = panel_score(Sc, A_L, Q, block_m=bm, block_l=bl, interpret=True)
+        np.testing.assert_allclose(r2, r2_ref, rtol=0, atol=2e-4 * scale)
+        np.testing.assert_allclose(en, en_ref, rtol=0, atol=2e-4 * scale)

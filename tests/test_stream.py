@@ -38,6 +38,7 @@ from repro.stream import (
     adaptive_cur_init,
     jitted_panel_update,
     merge_states,
+    padded_n,
     shard_panel_ranges,
     simulate_sharded_stream,
     stream_panels,
@@ -452,3 +453,194 @@ def test_multidev_stream_parity():
     )
     assert proc.returncode == 0, f"\nSTDOUT:{proc.stdout[-2000:]}\nSTDERR:{proc.stderr[-3000:]}"
     assert "OK scenario" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# scan-path parity: the compiled lax.scan driver (default) must reproduce the
+# per-panel jitted_panel_update loop for every configuration
+# ---------------------------------------------------------------------------
+
+
+def _assert_states_close(a, b, atol=2e-5):
+    np.testing.assert_allclose(a.C, b.C, atol=atol)
+    np.testing.assert_allclose(a.R, b.R, atol=atol)
+    np.testing.assert_allclose(a.M, b.M, atol=atol)
+    assert int(a.offset) == int(b.offset)
+
+
+def test_scan_parity_spsvd_fixed(A):
+    """SP-SVD: scan path vs per-panel path, including a ragged tail
+    (N=180, panel=48 → 3 full panels + 36-column zero-padded tail)."""
+    for panel in (45, 48):  # dividing and ragged
+        ref = stream_panels(
+            sp_svd_init(jax.random.key(201), M, N, sizes=SIZES, panel=panel),
+            A, panel, jit="per-panel",
+        )
+        got = stream_panels(
+            sp_svd_init(jax.random.key(201), M, N, sizes=SIZES, panel=panel),
+            A, panel, jit="scan",
+        )
+        _assert_states_close(got, ref)
+
+
+def test_scan_parity_streaming_cur_fixed(A):
+    ci = jnp.asarray([3, 50, 99, 120, 164, 7, 31, 88], jnp.int32)
+    ri = select_rows(jax.random.key(202), A, 8, "uniform").idx
+    for panel in (32, 50):  # 180 % 50 != 0 → ragged tail
+        def init():
+            return streaming_cur_init(
+                jax.random.key(203), M, N, ci, ri, sketch="countsketch", panel=panel
+            )
+        ref = stream_panels(init(), A, panel, jit="per-panel")
+        got = stream_panels(init(), A, panel, jit="scan")
+        _assert_states_close(got, ref)
+        np.testing.assert_array_equal(got.C, ref.C)
+        np.testing.assert_array_equal(got.R, ref.R)
+
+
+def test_scan_parity_adaptive_cols_evict_rows():
+    """Adaptive CUR with eviction + adaptive rows: the scan carry includes
+    the whole AdaptiveCURCtx/AdaptiveRowState — admission decisions, slot
+    tables, backfills must match the per-panel driver decision-for-decision."""
+    m, n, panel = 300, 240, 40
+    B, _ = spiked_rows_matrix(jax.random.key(210), m, n)
+
+    def init():
+        return adaptive_cur_init(
+            jax.random.key(211), m, n, 8, None, r=8, sketch="countsketch",
+            panel=panel, panel_cap=2, panel_cap_rows=1, swap_gain=2.0,
+        )
+
+    ref = stream_panels(init(), B, panel, jit="per-panel")
+    got = stream_panels(init(), B, panel, jit="scan")
+    _assert_states_close(got, ref)
+    np.testing.assert_array_equal(got.ctx.col_idx, ref.ctx.col_idx)
+    np.testing.assert_array_equal(got.ctx.row_idx, ref.ctx.row_idx)
+    np.testing.assert_array_equal(got.ctx.rows.admit_off, ref.ctx.rows.admit_off)
+    assert int(got.ctx.n_evicted) == int(ref.ctx.n_evicted)
+    np.testing.assert_allclose(got.ctx.ScC, ref.ctx.ScC, atol=2e-5)
+    np.testing.assert_allclose(
+        got.ctx.rows.row_sketch, ref.ctx.rows.row_sketch, atol=2e-4
+    )
+
+
+def test_scan_parity_adaptive_ragged_tail():
+    """Adaptive CUR on a stream where n is not a panel multiple (250 = 6×40
+    + 10): the zero-padded tail must admit/score identically on both paths."""
+    m, n, panel = 200, 250, 40
+    B, _ = spiked_decay_matrix(jax.random.key(212), m, n)
+    ri = select_rows(jax.random.key(213), B, 12, "uniform").idx
+
+    def init():
+        return adaptive_cur_init(
+            jax.random.key(214), m, n, 10, ri, sketch="countsketch",
+            panel=panel, panel_cap=2,
+        )
+
+    ref = stream_panels(init(), B, panel, jit="per-panel")
+    got = stream_panels(init(), B, panel, jit="scan")
+    _assert_states_close(got, ref)
+    np.testing.assert_array_equal(got.ctx.col_idx, ref.ctx.col_idx)
+    res_ref = adaptive_cur_finalize(ref)
+    res_got = adaptive_cur_finalize(got)
+    np.testing.assert_allclose(res_got.U, res_ref.U, atol=2e-4)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_scan_parity_sharded_fixed(A, workers):
+    """simulate_sharded_stream: fused single-program driver vs the per-panel
+    per-worker loop (fixed-index ops — chained accumulators are provably the
+    merged accumulators)."""
+    ci = jnp.asarray([3, 50, 99, 120, 164, 7, 31, 88], jnp.int32)
+    ri = select_rows(jax.random.key(220), A, 8, "uniform").idx
+
+    def init():
+        return streaming_cur_init(
+            jax.random.key(221), M, N, ci, ri, sketch="countsketch", panel=32
+        )
+
+    ref = simulate_sharded_stream(init(), A, 32, workers, jit="per-panel")
+    got = simulate_sharded_stream(init(), A, 32, workers, jit="scan")
+    _assert_states_close(got, ref)
+    np.testing.assert_array_equal(got.C, ref.C)
+    np.testing.assert_array_equal(got.R, ref.R)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_scan_parity_sharded_adaptive(workers):
+    """Sharded adaptive (divergent per-worker ctx → true per-worker
+    accumulators + in-program merge): same admissions as the per-panel
+    sharded driver, worker for worker."""
+    m, n, panel = 300, 240, 20
+    B, _ = spiked_rows_matrix(jax.random.key(230), m, n)
+
+    def init():
+        return adaptive_cur_init(
+            jax.random.key(231), m, n, 8, None, r=8, sketch="countsketch",
+            panel=panel, panel_cap=1, panel_cap_rows=1, swap_gain=2.0,
+        )
+
+    ref = simulate_sharded_stream(init(), B, panel, workers, jit="per-panel")
+    got = simulate_sharded_stream(init(), B, panel, workers, jit="scan")
+    _assert_states_close(got, ref, atol=2e-4)
+    np.testing.assert_array_equal(got.ctx.col_idx, ref.ctx.col_idx)
+    np.testing.assert_array_equal(got.ctx.row_idx, ref.ctx.row_idx)
+    assert int(got.ctx.n_filled) == int(ref.ctx.n_filled)
+
+
+def test_scan_stream_is_compile_cached(A):
+    """Repeated scan-path streams of the same shape must reuse the
+    module-scope compiled entry (no per-call retrace)."""
+    from repro.stream.engine import _scan_stream_panels
+
+    def run():
+        st = sp_svd_init(jax.random.key(240), M, N, sizes=SIZES, panel=45)
+        return stream_panels(st, A, 45)
+
+    run()
+    before = _scan_stream_panels._cache_size()
+    run()
+    run()
+    assert _scan_stream_panels._cache_size() == before
+
+
+def test_donation_consumes_input_state(A):
+    """The scan path donates the input state's buffers — using the input
+    after streaming must raise, and caller-provided index arrays must stay
+    alive (init copies them)."""
+    ci = jnp.asarray([3, 50, 99, 120, 164, 7, 31, 88], jnp.int32)
+    ri = select_rows(jax.random.key(250), A, 8, "uniform").idx
+    st0 = streaming_cur_init(jax.random.key(251), M, N, ci, ri, sketch="countsketch", panel=32)
+    st1 = stream_panels(st0, A, 32)
+    assert int(st1.offset) == padded_n(N, 32)  # tail panel zero-padded
+    # caller-held arrays survive (defensive copies at init)
+    np.testing.assert_array_equal(np.asarray(ci)[:3], [3, 50, 99])
+    _ = np.asarray(ri)
+    if st0.C.is_deleted():  # donation active on this backend
+        with pytest.raises(RuntimeError):
+            _ = np.asarray(st0.C)
+
+
+def test_adaptive_scorer_survives_duplicate_admissions():
+    """Near-duplicate heavy columns make the admitted Gram numerically
+    rank-deficient; the whitened-basis scorer must stay NaN-free (the
+    no-NaN contract of the floored-QR path it replaced) and keep admitting
+    later structure instead of silently going dead."""
+    m, n, panel = 200, 240, 40
+    B = 0.01 * jax.random.normal(jax.random.key(300), (m, n))
+    spike = jax.random.normal(jax.random.key(301), (m,)) * 9.0
+    # two (near-)identical heavy columns in the first panel...
+    B = B.at[:, 3].add(spike).at[:, 17].add(spike)
+    # ...and a genuinely new heavy column long after
+    B = B.at[:, 200].add(9.0 * jax.random.normal(jax.random.key(302), (m,)))
+    ri = select_rows(jax.random.key(303), B, 8, "uniform").idx
+    st = adaptive_cur_init(
+        jax.random.key(304), m, n, 6, ri, sketch="countsketch", panel=panel, panel_cap=2
+    )
+    st = stream_panels(st, B, panel)
+    res = adaptive_cur_finalize(st)
+    assert bool(jnp.all(jnp.isfinite(res.U)))
+    assert bool(jnp.all(jnp.isfinite(st.ctx.slot_score)))
+    admitted = set(np.asarray(res.col_idx).tolist())
+    assert {3, 17} & admitted  # the duplicates were scoreable
+    assert 200 in admitted, sorted(admitted)  # scorer still alive afterwards
