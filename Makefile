@@ -20,10 +20,13 @@ test-all:  ## both lanes
 smoke:  ## quick benchmark artifacts (CI)
 	$(PY) -m benchmarks.cur_decomp --smoke
 	$(PY) -m benchmarks.stream_bench --smoke
+	$(PY) -m benchmarks.spsd_approx --smoke
 
-perf-check:  ## regenerate the smoke stream bench and gate vs benchmarks/baselines/
+perf-check:  ## regenerate the smoke benches and gate vs benchmarks/baselines/
 	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/perf-check
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_stream.json
+	$(PY) -m benchmarks.spsd_approx --smoke --out-dir /tmp/perf-check
+	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_spsd.json
 
 bench:  ## full benchmark harness, CSV on stdout
 	$(PY) -m benchmarks.run

@@ -1,4 +1,4 @@
-"""Perf-regression gate: fresh ``BENCH_stream.json`` vs committed baseline.
+"""Perf-regression gate: fresh ``BENCH_<module>.json`` vs committed baseline.
 
 Compares every *timed* row (``us_per_call > 0``; derived-only rows — win
 ratios, parity deltas — carry 0.0 and are skipped) of a freshly generated
@@ -21,12 +21,20 @@ Rows present on only one side are reported but do not fail the gate
 the smoke baseline (different shapes), so mismatched ``meta.smoke`` flags
 are an error.
 
+The gate is artifact-generic: the committed snapshot is resolved from the
+artifact's own ``bench`` name and smoke flag
+(``benchmarks/baselines/BENCH_<bench>[.smoke].json``), so any module using
+``benchmarks.common.write_bench_json`` — currently ``stream_bench`` and
+``spsd_approx`` — plugs in by committing a baseline.
+
 Wired into ``make perf-check`` and the CI workflow (after the benchmark
 smokes). Regenerate the baselines intentionally with::
 
   PYTHONPATH=src python -m benchmarks.stream_bench --out-dir benchmarks/baselines
   PYTHONPATH=src python -m benchmarks.stream_bench --smoke --out-dir /tmp/smoke \
       && python -m benchmarks.check_regression --update-smoke-baseline /tmp/smoke/BENCH_stream.json
+
+(and the same two commands with ``benchmarks.spsd_approx`` / ``BENCH_spsd.json``).
 
 Usage::
 
@@ -58,9 +66,11 @@ def _timed_rows(artifact: dict) -> dict:
 
 
 def baseline_path_for(artifact: dict) -> str:
-    """The committed snapshot matching the artifact's smoke/full flavour."""
+    """The committed snapshot matching the artifact's bench name and
+    smoke/full flavour (``BENCH_<bench>[.smoke].json``)."""
     smoke = bool(artifact.get("meta", {}).get("smoke", False))
-    name = "BENCH_stream.smoke.json" if smoke else "BENCH_stream.json"
+    bench = artifact.get("bench", "stream")
+    name = f"BENCH_{bench}.smoke.json" if smoke else f"BENCH_{bench}.json"
     return os.path.join(BASELINE_DIR, name)
 
 
@@ -121,7 +131,8 @@ def main() -> int:
     args = ap.parse_args()
     if args.update_smoke_baseline:
         os.makedirs(BASELINE_DIR, exist_ok=True)
-        dst = os.path.join(BASELINE_DIR, "BENCH_stream.smoke.json")
+        bench = _load(args.update_smoke_baseline).get("bench", "stream")
+        dst = os.path.join(BASELINE_DIR, f"BENCH_{bench}.smoke.json")
         shutil.copy(args.update_smoke_baseline, dst)
         print(f"updated {dst}")
         return 0

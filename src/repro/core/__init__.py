@@ -7,6 +7,9 @@ Public surface:
 * gmr            — exact GMR + Algorithm 1 (Fast GMR) + Theorem-1 utilities
 * projections    — §3.2 convex projections (Π_sym, Π_PSD)
 * spsd           — §4: Nyström / fast-SPSD (Wang'16b) / **Algorithm 2** / optimal core
+                   (now a shim over the layered :mod:`repro.spsd` subsystem,
+                   whose streaming half runs Algorithm 2 single-pass over
+                   kernel panels via the symmetric :mod:`repro.stream` engine)
 * svd            — §5: **Algorithm 3** streaming Fast SP-SVD + Tropp'17 baseline
 * leverage       — exact & sketched leverage scores
 
@@ -29,15 +32,6 @@ from .sketching import (
 from .gmr import exact_gmr, fast_gmr, fast_gmr_core, rho, error_ratio, sketched_fro_norm
 from .projections import psd_project, sym_project
 from .leverage import approx_leverage_scores, leverage_scores
-from .spsd import (
-    SPSDResult,
-    faster_spsd,
-    fast_spsd_wang,
-    nystrom,
-    optimal_core,
-    rbf_kernel_oracle,
-    spsd_error_ratio,
-)
 from .svd import (
     fast_sp_svd,
     practical_sp_svd,
@@ -52,15 +46,38 @@ _CUR_EXPORTS = (
     "CURResult", "cur_error_ratio", "cur_reconstruct", "cur_relative_error",
     "cur_sketch_sizes", "exact_cur", "fast_cur", "select_columns", "select_rows",
     "streaming_cur_finalize", "streaming_cur_init", "streaming_cur_update",
-    "batched_fast_cur",
+    "batched_fast_cur", "symmetric_cur", "spsd_to_cur",
+)
+
+# The §4 SPSD surface now lives in the layered repro.spsd subsystem; it is
+# re-exported here lazily — like the CUR surface — because repro.spsd's
+# modules import repro.core submodules at load time (an eager import here
+# would re-enter repro.spsd mid-initialization whenever repro.spsd is the
+# first package imported).
+_SPSD_EXPORTS = (
+    "SPSDResult", "faster_spsd", "fast_spsd_wang", "leverage_sampling_sketches",
+    "matrix_oracle", "nystrom", "optimal_core", "rbf_kernel_oracle",
+    "spsd_error_ratio",
+    "streaming_spsd_init", "streaming_spsd_finalize",
+    "adaptive_spsd_init", "adaptive_spsd_finalize",
 )
 
 
-def __getattr__(name):  # PEP 562: lazy repro.cur re-export (cycle-free)
+def __getattr__(name):  # PEP 562: lazy re-exports (cycle-free)
     if name in _CUR_EXPORTS:
         from .. import cur as _cur
 
         return getattr(_cur, name)
+    if name in _SPSD_EXPORTS:
+        from .. import spsd as _spsd
+
+        return getattr(_spsd, name)
+    if name == "spsd":
+        # the submodule itself was an eager attribute before the move;
+        # keep `repro.core.spsd` attribute access working lazily too
+        import importlib
+
+        return importlib.import_module(".spsd", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
@@ -70,9 +87,8 @@ __all__ = [
     "exact_gmr", "fast_gmr", "fast_gmr_core", "rho", "error_ratio", "sketched_fro_norm",
     "psd_project", "sym_project",
     "approx_leverage_scores", "leverage_scores",
-    "SPSDResult", "faster_spsd", "fast_spsd_wang", "nystrom", "optimal_core",
-    "rbf_kernel_oracle", "spsd_error_ratio",
     "fast_sp_svd", "practical_sp_svd", "sp_svd_finalize", "sp_svd_init", "sp_svd_sizes",
     "sp_svd_update", "svd_error_ratio",
     *_CUR_EXPORTS,
+    *_SPSD_EXPORTS,
 ]

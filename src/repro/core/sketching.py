@@ -348,8 +348,34 @@ class RowSampling:
         S = jnp.zeros((self.s, self.m), self.scale.dtype)
         return S.at[jnp.arange(self.s), self.idx].add(self.scale)
 
-    def cols(self, offset: int, size: int):  # pragma: no cover - structural
-        raise NotImplementedError("row sampling is not column-sliceable")
+    def cols(self, offset: int, size: int) -> "RowSampling":
+        """Restrict to the source-column window ``[offset, offset+size)``.
+
+        A sampling matrix has one nonzero per row (at column ``idx[i]``), so
+        the window restriction re-bases in-window indices and zero-scales
+        out-of-window rows — samples outside the window contribute nothing,
+        which is exactly the ``S[:, offset:offset+size]`` slice. ``offset``
+        may be traced (the streaming engine slides the window per panel).
+        """
+        rel = self.idx - offset
+        in_window = (rel >= 0) & (rel < size)
+        return RowSampling(
+            idx=jnp.clip(rel, 0, size - 1),
+            scale=jnp.where(in_window, self.scale, jnp.zeros((), self.scale.dtype)),
+            m=size,
+        )
+
+    def pad_cols(self, total: int) -> "RowSampling":
+        """Extend the source dim with zero columns (never sampled).
+
+        Sampled indices always lie in ``[0, m)``, so windows past the true
+        source dim contain no samples and ``cols()`` zero-scales them — the
+        exact ragged-tail contract of :mod:`repro.stream.engine` holds with
+        no stored-array change.
+        """
+        if total <= self.m:
+            return self
+        return RowSampling(idx=self.idx, scale=self.scale, m=total)
 
 
 _register(RowSampling, ("idx", "scale"), ("m",))

@@ -1,150 +1,37 @@
-"""SPSD / kernel-matrix approximation (paper §4).
+"""Compatibility shim: the §4 SPSD implementation moved to ``repro.spsd``.
 
-Implements, with identical call signatures so benchmarks can sweep them:
-
-* :func:`nystrom`            — Williams & Seeger 2001 (conventional baseline)
-* :func:`optimal_core`       — X = C† K (C†)ᵀ (the target the paper compares to)
-* :func:`fast_spsd_wang`     — Wang et al. 2016b, Eqn. (4.1): one sketch S,
-                               X̂ = (SC)† (S K Sᵀ) (Cᵀ Sᵀ)†
-* :func:`faster_spsd`        — **Algorithm 2 (ours/paper)**: two independent
-                               leverage-score sampling sketches + PSD projection,
-                               observing only nc + s² kernel entries (Theorem 3)
-
-All sampling-based paths work through a *kernel-entry oracle* so only the
-entries the algorithm touches are ever computed — the paper's headline
-query-complexity win. ``entries_observed`` is reported for Table-4-style
-accounting.
+The batch algorithms (Nyström / optimal core / fast-SPSD Wang'16b /
+**Algorithm 2** ``faster_spsd``) now live in :mod:`repro.spsd.batch` as the
+batch half of the layered ``repro/spsd/`` subsystem — the streaming half
+(:mod:`repro.spsd.streaming`) runs the same approximation single-pass over
+kernel-column panels via the symmetric mode of the :mod:`repro.stream`
+engine. This module re-exports the batch surface so every historical
+import path (``repro.core.spsd`` and the ``repro.core`` package alike)
+keeps working unchanged.
 """
 
-from __future__ import annotations
-
-import dataclasses
-from typing import Callable, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from .gmr import _solve_least_squares, fast_gmr_core
-from .leverage import leverage_scores
-from .projections import psd_project
+from ..spsd.batch import (  # noqa: F401 — re-exports
+    KernelOracle,
+    SPSDResult,
+    fast_spsd_wang,
+    faster_spsd,
+    leverage_sampling_sketches,
+    matrix_oracle,
+    nystrom,
+    optimal_core,
+    rbf_kernel_oracle,
+    spsd_error_ratio,
+)
 
 __all__ = [
     "rbf_kernel_oracle",
+    "matrix_oracle",
     "KernelOracle",
+    "SPSDResult",
+    "leverage_sampling_sketches",
     "nystrom",
     "optimal_core",
     "fast_spsd_wang",
     "faster_spsd",
     "spsd_error_ratio",
 ]
-
-# A kernel oracle maps (row_idx | None, col_idx | None) -> K[rows][:, cols].
-KernelOracle = Callable[[Optional[jax.Array], Optional[jax.Array]], jax.Array]
-
-
-def rbf_kernel_oracle(X: jax.Array, sigma: float) -> KernelOracle:
-    """RBF oracle over data ``X (n, d)``: K_ij = exp(−σ ||xᵢ − xⱼ||²) (§6.2)."""
-
-    def oracle(rows, cols):
-        Xr = X if rows is None else jnp.take(X, rows, axis=0)
-        Xc = X if cols is None else jnp.take(X, cols, axis=0)
-        sq = (
-            jnp.sum(Xr * Xr, axis=1)[:, None]
-            - 2.0 * (Xr @ Xc.T)
-            + jnp.sum(Xc * Xc, axis=1)[None, :]
-        )
-        return jnp.exp(-sigma * jnp.maximum(sq, 0.0))
-
-    return oracle
-
-
-@dataclasses.dataclass
-class SPSDResult:
-    """Column matrix C, core X (K ≈ C X Cᵀ), and the entry-observation count."""
-
-    C: jax.Array
-    X: jax.Array
-    col_idx: jax.Array
-    entries_observed: int
-
-
-def _uniform_columns(key, n: int, c: int) -> jax.Array:
-    return jax.random.choice(key, n, (c,), replace=False)
-
-
-def nystrom(key, oracle: KernelOracle, n: int, c: int) -> SPSDResult:
-    """Conventional Nyström: X = W† with W the c×c intersection block."""
-    idx = _uniform_columns(key, n, c)
-    C = oracle(None, idx)  # (n, c)
-    W = jnp.take(C, idx, axis=0)  # (c, c) — already-observed entries
-    dt = jnp.promote_types(C.dtype, jnp.float32)
-    X = jnp.linalg.pinv(W.astype(dt), rtol=1e-6).astype(C.dtype)
-    return SPSDResult(C=C, X=X, col_idx=idx, entries_observed=n * c)
-
-
-def optimal_core(key, oracle: KernelOracle, n: int, c: int) -> SPSDResult:
-    """X = C† K (C†)ᵀ — requires observing all n² entries (the upper bound)."""
-    idx = _uniform_columns(key, n, c)
-    C = oracle(None, idx)
-    K = oracle(None, None)
-    left = _solve_least_squares(C, K)  # C† K
-    X = _solve_least_squares(C, left.T).T  # C† K (C†)ᵀ
-    return SPSDResult(C=C, X=psd_project(X), col_idx=idx, entries_observed=n * n)
-
-
-def fast_spsd_wang(key, oracle: KernelOracle, n: int, c: int, s: int) -> SPSDResult:
-    """Wang et al. 2016b (Eqn. 4.1): single leverage-score sampling sketch S.
-
-    X̂ = (SC)† (S K Sᵀ) (Cᵀ Sᵀ)† — symmetric by construction, but needs
-    s = O(c√(n/ε)) for the (1+ε) bound (Table 4), i.e. O(nc²/ε) entries.
-    """
-    k_col, k_s = jax.random.split(key)
-    idx = _uniform_columns(k_col, n, c)
-    C = oracle(None, idx)
-    lev = leverage_scores(C)
-    probs = lev / jnp.sum(lev)
-    sidx = jax.random.choice(k_s, n, (s,), replace=True, p=probs)
-    scale = 1.0 / jnp.sqrt(s * probs[sidx])
-    SC = C[sidx] * scale[:, None]
-    SKS = oracle(sidx, sidx) * (scale[:, None] * scale[None, :])
-    X = fast_gmr_core(SC, SKS, SC.T)
-    return SPSDResult(
-        C=C, X=psd_project(X), col_idx=idx, entries_observed=n * c + s * s
-    )
-
-
-def faster_spsd(key, oracle: KernelOracle, n: int, c: int, s: int) -> SPSDResult:
-    """**Algorithm 2** — the paper's faster SPSD approximation.
-
-    1. uniform-sample c columns → C (nc entries);
-    2. leverage scores of C;
-    3. two *independent* leverage-sampling sketches S₁, S₂ (s×n);
-    4. X̃ = (S₁C)† (S₁ K S₂ᵀ) (Cᵀ S₂ᵀ)†  — only s² extra entries;
-    5. X̃₊ = Π_PSD(X̃)  (Theorem 2 keeps the (1+ε) bound after projection).
-    """
-    k_col, k_s1, k_s2 = jax.random.split(key, 3)
-    idx = _uniform_columns(k_col, n, c)
-    C = oracle(None, idx)
-    lev = leverage_scores(C)
-    probs = lev / jnp.sum(lev)
-
-    i1 = jax.random.choice(k_s1, n, (s,), replace=True, p=probs)
-    sc1 = 1.0 / jnp.sqrt(s * probs[i1])
-    i2 = jax.random.choice(k_s2, n, (s,), replace=True, p=probs)
-    sc2 = 1.0 / jnp.sqrt(s * probs[i2])
-
-    S1C = C[i1] * sc1[:, None]  # (s, c) — rows of already-observed C
-    CS2 = (C[i2] * sc2[:, None]).T  # (c, s)
-    S1KS2 = oracle(i1, i2) * (sc1[:, None] * sc2[None, :])  # s² fresh entries
-
-    X = fast_gmr_core(S1C, S1KS2, CS2)
-    return SPSDResult(
-        C=C, X=psd_project(X), col_idx=idx, entries_observed=n * c + s * s
-    )
-
-
-def spsd_error_ratio(K: jax.Array, res: SPSDResult) -> jax.Array:
-    """§6.2 metric: ||K − C X Cᵀ||_F / ||K||_F."""
-    dt = jnp.promote_types(K.dtype, jnp.float32)
-    approx = (res.C @ res.X @ res.C.T).astype(dt)
-    return jnp.linalg.norm(K.astype(dt) - approx) / jnp.linalg.norm(K.astype(dt))

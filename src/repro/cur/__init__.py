@@ -13,6 +13,12 @@ Layered subsystem:
   (re-exported here).
 * :mod:`repro.cur.batched`   — vmapped CUR of matrix stacks for serving,
   fused-Pallas-kernel core product.
+* :mod:`repro.cur.symmetric_cur` — symmetric CUR for SPSD matrices
+  (``R = Cᵀ`` tied): every selection policy above drives the sampled index
+  set, the core is Algorithm 2's sketched solve + PSD projection
+  (delegated to :mod:`repro.spsd`), and results keep the
+  ``spsd_error_ratio`` contract. Streaming variant in
+  :mod:`repro.spsd.streaming`.
 """
 
 from .selection import SELECTION_POLICIES, Selection, select_columns, select_rows
@@ -32,6 +38,7 @@ from .streaming import (
     streaming_cur_update,
 )
 from .batched import batched_fast_cur, draw_shared_sketches
+from .symmetric_cur import spsd_to_cur, symmetric_cur
 from ..stream.adaptive import adaptive_cur_finalize, adaptive_cur_init
 
 __all__ = [
@@ -41,4 +48,5 @@ __all__ = [
     "StreamingCURState", "streaming_cur_finalize", "streaming_cur_init", "streaming_cur_update",
     "adaptive_cur_finalize", "adaptive_cur_init",
     "batched_fast_cur", "draw_shared_sketches",
+    "symmetric_cur", "spsd_to_cur",
 ]

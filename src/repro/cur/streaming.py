@@ -9,7 +9,7 @@ panels ``A_L`` and is never retained. Per panel:
 * ``R[:, cols] = A_L[row_idx, :]`` — selected rows accumulate left→right;
 * ``M += (S_C A_L) · S_R[:, cols]ᵀ`` via the ``cols()`` sketch-window
   primitive of ``repro.core.sketching`` (column-sliceable families only:
-  gaussian / countsketch / osnap).
+  gaussian / countsketch / osnap / sampling).
 
 Memory: C (m·c) + R (r·n) + M (s_c·s_r) — the factors themselves plus a
 constant-size core sketch; ``finalize`` then runs the Fast-GMR core solve.
@@ -40,6 +40,7 @@ from ..core.sketching import draw_sketch
 from ..stream.engine import (
     PanelOps,
     PanelState,
+    copy_selected_columns,
     fresh_pytree,
     padded_n,
     panel_update,
@@ -78,11 +79,7 @@ def _cur_core_sketches(ctx: CURStreamCtx):
 
 def _cur_update_c(ctx: CURStreamCtx, C, A_L, sc_a, off):
     # selected columns that live in this panel → their C slots
-    L = A_L.shape[1]
-    rel = ctx.col_idx - off
-    in_panel = (rel >= 0) & (rel < L)
-    picked = jnp.take(A_L, jnp.clip(rel, 0, L - 1), axis=1)  # (m, c)
-    return ctx, jnp.where(in_panel[None, :], picked.astype(C.dtype), C)
+    return ctx, copy_selected_columns(ctx.col_idx, C, A_L, off)
 
 
 def _cur_r_block(ctx: CURStreamCtx, A_L, off):
@@ -157,7 +154,7 @@ def streaming_cur_init(
     else:
         S_C, S_R = fresh_pytree(sketches)  # donation-safe copies
         s_c, s_r = S_C.s, S_R.s
-    S_R.cols(0, 1)  # fail fast on non-sliceable families (srht / sampling)
+    S_R.cols(0, 1)  # fail fast on non-sliceable families (srht)
     n_pad = padded_n(n, panel) if panel else n
     ctx = CURStreamCtx(col_idx=col_idx, row_idx=row_idx, S_C=S_C, S_R=S_R.pad_cols(n_pad))
     return StreamingCURState(

@@ -1,0 +1,108 @@
+"""Symmetric CUR decomposition: ``K ≈ C X Cᵀ`` with ``R = Cᵀ`` tied.
+
+For an SPSD matrix the natural CUR factorization samples *one* index set —
+selecting rows independently of columns wastes half the budget and breaks
+symmetry. Symmetric CUR keeps ``R = Cᵀ`` by construction (the tied-operand
+form of paper §4 / ROADMAP "SPSD path for symmetric CUR"), which makes it
+exactly the SPSD approximation problem: the core solve *is* Algorithm 2's
+``X̃ = (S₁C)† (S₁ K S₂ᵀ) (Cᵀ S₂ᵀ)†`` followed by the PSD projection
+(Theorem 2), so this module reuses :mod:`repro.spsd.batch` for the solve
+and contributes what the SPSD side lacks: **column selection policies**.
+Every :mod:`repro.cur.selection` policy (uniform / leverage /
+approx_leverage / pivoted_qr) can drive the sampled index set — on kernel
+matrices the leverage and pivoted-QR policies concentrate the budget on the
+landmark points the uniform draw misses.
+
+Results keep the full SPSD contract — an
+:class:`~repro.spsd.batch.SPSDResult` whose ``X`` is PSD and whose quality
+is measured by :func:`~repro.spsd.batch.spsd_error_ratio`; the
+entry-observation accounting is preserved (``nc + s²`` for the sketched
+core, ``n²`` for the exact one). :func:`spsd_to_cur` adapts the result to
+the :class:`~repro.cur.cur.CURResult` surface (``U = X``, ``R = Cᵀ``,
+``row_idx = col_idx``) for CUR-generic consumers.
+
+The single-pass streaming variant of the same factorization lives in
+:mod:`repro.spsd.streaming` (symmetric engine plug-in, fixed or adaptively
+admitted columns).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..spsd.batch import SPSDResult, faster_spsd, matrix_oracle, optimal_core
+from .cur import CURResult
+from .selection import select_columns
+
+__all__ = ["symmetric_cur", "spsd_to_cur"]
+
+
+def symmetric_cur(
+    key,
+    K: jax.Array,
+    c: Optional[int] = None,
+    *,
+    policy: str = "uniform",
+    col_idx: Optional[jax.Array] = None,
+    s: Optional[int] = None,
+    k: Optional[int] = None,
+    method: str = "faster",
+) -> SPSDResult:
+    """Policy-driven symmetric CUR of an SPSD matrix: ``K ≈ C X Cᵀ``.
+
+    Args:
+        key: PRNG key (selection + core sketches).
+        K: the SPSD matrix, (n, n). Materialized input — the policies score
+            actual columns; for oracle-bound access with uniform sampling
+            use :func:`repro.spsd.faster_spsd` directly, and for
+            single-pass access :mod:`repro.spsd.streaming`.
+        c: number of columns to select (ignored when ``col_idx`` given).
+        policy: any :data:`repro.cur.selection.SELECTION_POLICIES` entry;
+            selection runs on ``K`` itself (leverage of an SPSD matrix's
+            columns equals that of its rows, so one draw serves both sides).
+        col_idx: explicit index set overriding the policy draw.
+        s: sketch size for the ``"faster"`` core (default ``min(10·c, n)``,
+            the paper's §6.2 "≈ optimal" operating point).
+        k: target subspace rank for the leverage policies (defaults to
+            ``c`` inside :func:`~repro.cur.selection.select_columns`).
+        method: ``"faster"`` — Algorithm 2 sketched core (nc + s² entry
+            accounting); ``"exact"`` — the oracle core ``C† K (C†)ᵀ`` (n²).
+
+    Returns:
+        An :class:`~repro.spsd.batch.SPSDResult`; ``X`` is PSD
+        (projection applied on both methods) and
+        :func:`~repro.spsd.batch.spsd_error_ratio` measures the fit.
+    """
+    n, n2 = K.shape
+    if n != n2:
+        raise ValueError(f"symmetric CUR needs a square SPSD matrix, got {K.shape}")
+    k_sel, k_core = jax.random.split(key)
+    if col_idx is None:
+        if c is None:
+            raise ValueError("pass either `c` or explicit `col_idx`")
+        col_idx = select_columns(k_sel, K, c, policy, k=k).idx
+    col_idx = jnp.asarray(col_idx, jnp.int32)
+    c = col_idx.shape[0]
+    oracle = matrix_oracle(K)
+    if method == "exact":
+        return optimal_core(k_core, oracle, n, c, col_idx=col_idx)
+    if method != "faster":
+        raise ValueError(f"unknown method {method!r}; expected 'faster' or 'exact'")
+    if s is None:
+        s = min(10 * c, n)
+    return faster_spsd(k_core, oracle, n, c, s, col_idx=col_idx)
+
+
+def spsd_to_cur(res: SPSDResult) -> CURResult:
+    """Adapt an SPSD factorization to the CUR surface: ``U = X``, ``R = Cᵀ``.
+
+    ``row_idx`` aliases ``col_idx`` (the tied index set), so CUR-generic
+    consumers (``cur_reconstruct``, ``cur_relative_error``, serving code)
+    work unchanged on symmetric factorizations.
+    """
+    return CURResult(
+        C=res.C, U=res.X, R=res.C.T, col_idx=res.col_idx, row_idx=res.col_idx
+    )

@@ -1,0 +1,52 @@
+"""SPSD / kernel-matrix approximation subsystem (paper §4, Algorithm 2).
+
+Layered like the sibling :mod:`repro.cur` subsystem:
+
+* :mod:`repro.spsd.batch`     — the oracle-bound batch paths: Nyström,
+  optimal core, fast-SPSD (Wang et al. 2016b) and **Algorithm 2**
+  (``faster_spsd``), plus the shared leverage-sampling sketch construction
+  and the entry-observation accounting (Theorem 3).
+* :mod:`repro.spsd.streaming` — single-pass SPSD over column panels of
+  ``K`` through the **symmetric (tied-operand)** mode of the
+  :mod:`repro.stream` engine (``R = Cᵀ`` derived, no row accumulator),
+  with fixed or adaptively-admitted kernel columns and DP-sharded
+  ingestion for free.
+
+Symmetric CUR — the same ``K ≈ C X Cᵀ`` factorization driven by the
+:mod:`repro.cur.selection` policies — lives in
+``repro.cur.symmetric_cur`` and delegates its core solve here.
+
+The batch APIs remain re-exported unchanged from :mod:`repro.core`
+(``from repro.core import faster_spsd`` keeps working).
+"""
+
+from .batch import (
+    KernelOracle,
+    SPSDResult,
+    fast_spsd_wang,
+    faster_spsd,
+    leverage_sampling_sketches,
+    matrix_oracle,
+    nystrom,
+    optimal_core,
+    rbf_kernel_oracle,
+    spsd_error_ratio,
+)
+from .streaming import (
+    ADAPTIVE_SPSD_OPS,
+    STREAMING_SPSD_OPS,
+    SPSDStreamCtx,
+    adaptive_spsd_finalize,
+    adaptive_spsd_init,
+    streaming_spsd_finalize,
+    streaming_spsd_init,
+)
+
+__all__ = [
+    "KernelOracle", "SPSDResult", "fast_spsd_wang", "faster_spsd",
+    "leverage_sampling_sketches", "matrix_oracle", "nystrom", "optimal_core",
+    "rbf_kernel_oracle", "spsd_error_ratio",
+    "ADAPTIVE_SPSD_OPS", "STREAMING_SPSD_OPS", "SPSDStreamCtx",
+    "adaptive_spsd_finalize", "adaptive_spsd_init",
+    "streaming_spsd_finalize", "streaming_spsd_init",
+]

@@ -1,0 +1,275 @@
+"""Batch SPSD / kernel-matrix approximation (paper §4).
+
+The batch half of the :mod:`repro.spsd` subsystem. Implements, with
+identical call signatures so benchmarks can sweep them:
+
+* :func:`nystrom`            — Williams & Seeger 2001 (conventional baseline)
+* :func:`optimal_core`       — X = C† K (C†)ᵀ (the target the paper compares to)
+* :func:`fast_spsd_wang`     — Wang et al. 2016b, Eqn. (4.1): one sketch S,
+                               X̂ = (SC)† (S K Sᵀ) (Cᵀ Sᵀ)†
+* :func:`faster_spsd`        — **Algorithm 2 (ours/paper)**: two independent
+                               leverage-score sampling sketches + PSD projection,
+                               observing only nc + s² kernel entries (Theorem 3)
+
+All sampling-based paths work through a *kernel-entry oracle* so only the
+entries the algorithm touches are ever computed — the paper's headline
+query-complexity win. ``entries_observed`` is reported for Table-4-style
+accounting.
+
+The leverage-sampling sketches are :class:`repro.core.sketching.RowSampling`
+operators (:func:`leverage_sampling_sketches`), shared verbatim with the
+single-pass streaming path (:mod:`repro.spsd.streaming`) so streamed and
+batch results are comparable on identical randomness; ``faster_spsd`` and
+``optimal_core`` accept ``col_idx``/``sketches`` injection for exactly that
+purpose (and for ``repro.cur.symmetric_cur``'s policy-driven column
+selection).
+
+These APIs remain re-exported unchanged from :mod:`repro.core` (via the
+``repro.core.spsd`` compatibility shim) — existing callers are unaffected
+by the ``repro/spsd/`` layering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.gmr import _solve_least_squares, fast_gmr_core
+from ..core.leverage import leverage_scores
+from ..core.projections import psd_project
+from ..core.sketching import RowSampling
+
+__all__ = [
+    "rbf_kernel_oracle",
+    "matrix_oracle",
+    "KernelOracle",
+    "SPSDResult",
+    "leverage_sampling_sketches",
+    "nystrom",
+    "optimal_core",
+    "fast_spsd_wang",
+    "faster_spsd",
+    "spsd_error_ratio",
+]
+
+# A kernel oracle maps (row_idx | None, col_idx | None) -> K[rows][:, cols].
+KernelOracle = Callable[[Optional[jax.Array], Optional[jax.Array]], jax.Array]
+
+
+def rbf_kernel_oracle(X: jax.Array, sigma: float) -> KernelOracle:
+    """RBF oracle over data ``X (n, d)``: K_ij = exp(−σ ||xᵢ − xⱼ||²) (§6.2)."""
+
+    def oracle(rows, cols):
+        Xr = X if rows is None else jnp.take(X, rows, axis=0)
+        Xc = X if cols is None else jnp.take(X, cols, axis=0)
+        sq = (
+            jnp.sum(Xr * Xr, axis=1)[:, None]
+            - 2.0 * (Xr @ Xc.T)
+            + jnp.sum(Xc * Xc, axis=1)[None, :]
+        )
+        return jnp.exp(-sigma * jnp.maximum(sq, 0.0))
+
+    return oracle
+
+
+def matrix_oracle(K: jax.Array) -> KernelOracle:
+    """Entry oracle over an already-materialized SPSD matrix ``K (n, n)``.
+
+    Lets the oracle-bound batch paths (and ``repro.cur.symmetric_cur``) run
+    on dense matrices; ``entries_observed`` then counts the entries the
+    algorithm *would* have queried, preserving the Theorem-3 accounting.
+    """
+
+    def oracle(rows, cols):
+        Kr = K if rows is None else jnp.take(K, rows, axis=0)
+        return Kr if cols is None else jnp.take(Kr, cols, axis=1)
+
+    return oracle
+
+
+@dataclasses.dataclass
+class SPSDResult:
+    """Column matrix C, core X (K ≈ C X Cᵀ), and the entry-observation count.
+
+    Registered as a pytree (``entries_observed`` is static metadata) so the
+    streaming finalizers can return it from jitted code.
+    """
+
+    C: jax.Array
+    X: jax.Array
+    col_idx: jax.Array
+    entries_observed: int
+
+
+jax.tree_util.register_dataclass(
+    SPSDResult, data_fields=["C", "X", "col_idx"], meta_fields=["entries_observed"]
+)
+
+
+def _validate_sizes(n: int, c: int, s: Optional[int] = None) -> None:
+    """Clear errors for impossible sample sizes (matching repro.cur.selection).
+
+    ``c`` columns are drawn *without* replacement, so ``0 < c ≤ n`` is a hard
+    requirement — ``jax.random.choice(replace=False)`` otherwise fails with
+    an opaque shape error deep in the sampler. The ``s`` sketch rows are
+    drawn *with* replacement (Table 3), so ``s > n`` is legal; only ``s ≤ 0``
+    is rejected.
+    """
+    if not 0 < c <= n:
+        raise ValueError(f"need 0 < c <= n sampled columns, got c={c}, n={n}")
+    if s is not None and s <= 0:
+        raise ValueError(f"need s > 0 sketch rows, got s={s} (n={n})")
+
+
+def _uniform_columns(key, n: int, c: int) -> jax.Array:
+    return jax.random.choice(key, n, (c,), replace=False)
+
+
+def _resolve_columns(key, oracle: KernelOracle, n: int, c: int, col_idx):
+    """Uniform column draw, or the caller's explicit (policy-driven) indices."""
+    if col_idx is None:
+        col_idx = _uniform_columns(key, n, c)
+    else:
+        col_idx = jnp.asarray(col_idx, jnp.int32)
+        if col_idx.shape[0] != c:
+            raise ValueError(f"col_idx has {col_idx.shape[0]} entries, expected c={c}")
+    return col_idx, oracle(None, col_idx)
+
+
+def _leverage_pair(k1, k2, C: jax.Array, s: int) -> Tuple[RowSampling, RowSampling]:
+    probs = leverage_scores(C)
+    probs = probs / jnp.sum(probs)
+    n = C.shape[0]
+    return (
+        RowSampling.draw(k1, s, n, probs=probs, dtype=jnp.float32),
+        RowSampling.draw(k2, s, n, probs=probs, dtype=jnp.float32),
+    )
+
+
+def leverage_sampling_sketches(key, C: jax.Array, s: int) -> Tuple[RowSampling, RowSampling]:
+    """Algorithm 2 steps 2–3: two *independent* ``(s, n)`` leverage-score
+    sampling sketches w.r.t. ``range(C)``.
+
+    Returned as :class:`repro.core.sketching.RowSampling` operators so the
+    identical pair can drive both the batch solve (:func:`faster_spsd`
+    ``sketches=``) and the single-pass streaming solve
+    (:func:`repro.spsd.streaming.streaming_spsd_init` ``sketches=``) —
+    the parity contract tested in ``tests/test_spsd_stream.py``.
+    """
+    k1, k2 = jax.random.split(key)
+    return _leverage_pair(k1, k2, C, s)
+
+
+def _sampled_block(oracle: KernelOracle, S1: RowSampling, S2: RowSampling) -> jax.Array:
+    """``S₁ K S₂ᵀ`` via s² oracle entries (sampling sketches only)."""
+    return oracle(S1.idx, S2.idx) * (S1.scale[:, None] * S2.scale[None, :])
+
+
+def _require_sampling(sketches) -> Tuple[RowSampling, RowSampling]:
+    S1, S2 = sketches
+    if not (isinstance(S1, RowSampling) and isinstance(S2, RowSampling)):
+        raise TypeError(
+            "batch SPSD sketch injection requires RowSampling operators — the "
+            "entry-oracle contract needs explicit sampled indices (S K Sᵀ must "
+            "cost s² entries, not n²)"
+        )
+    return S1, S2
+
+
+def nystrom(key, oracle: KernelOracle, n: int, c: int) -> SPSDResult:
+    """Conventional Nyström: X = W† with W the c×c intersection block."""
+    _validate_sizes(n, c)
+    idx = _uniform_columns(key, n, c)
+    C = oracle(None, idx)  # (n, c)
+    W = jnp.take(C, idx, axis=0)  # (c, c) — already-observed entries
+    dt = jnp.promote_types(C.dtype, jnp.float32)
+    X = jnp.linalg.pinv(W.astype(dt), rtol=1e-6).astype(C.dtype)
+    return SPSDResult(C=C, X=X, col_idx=idx, entries_observed=n * c)
+
+
+def optimal_core(
+    key, oracle: KernelOracle, n: int, c: int, *, col_idx=None
+) -> SPSDResult:
+    """X = C† K (C†)ᵀ — requires observing all n² entries (the upper bound).
+
+    ``col_idx`` overrides the uniform column draw (policy-driven selection,
+    e.g. ``repro.cur.symmetric_cur``).
+    """
+    _validate_sizes(n, c)
+    idx, C = _resolve_columns(key, oracle, n, c, col_idx)
+    K = oracle(None, None)
+    left = _solve_least_squares(C, K)  # C† K
+    X = _solve_least_squares(C, left.T).T  # C† K (C†)ᵀ
+    return SPSDResult(C=C, X=psd_project(X), col_idx=idx, entries_observed=n * n)
+
+
+def fast_spsd_wang(key, oracle: KernelOracle, n: int, c: int, s: int) -> SPSDResult:
+    """Wang et al. 2016b (Eqn. 4.1): single leverage-score sampling sketch S.
+
+    X̂ = (SC)† (S K Sᵀ) (Cᵀ Sᵀ)† — symmetric by construction, but needs
+    s = O(c√(n/ε)) for the (1+ε) bound (Table 4), i.e. O(nc²/ε) entries.
+    """
+    _validate_sizes(n, c, s)
+    k_col, k_s = jax.random.split(key)
+    idx = _uniform_columns(k_col, n, c)
+    C = oracle(None, idx)
+    probs = leverage_scores(C)
+    S = RowSampling.draw(k_s, s, n, probs=probs / jnp.sum(probs), dtype=jnp.float32)
+    SC = S.apply(C)
+    SKS = _sampled_block(oracle, S, S)
+    X = fast_gmr_core(SC, SKS, SC.T)
+    return SPSDResult(
+        C=C, X=psd_project(X), col_idx=idx, entries_observed=n * c + s * s
+    )
+
+
+def faster_spsd(
+    key,
+    oracle: KernelOracle,
+    n: int,
+    c: int,
+    s: int,
+    *,
+    col_idx=None,
+    sketches: Optional[Tuple[RowSampling, RowSampling]] = None,
+) -> SPSDResult:
+    """**Algorithm 2** — the paper's faster SPSD approximation.
+
+    1. uniform-sample c columns → C (nc entries);
+    2. leverage scores of C;
+    3. two *independent* leverage-sampling sketches S₁, S₂ (s×n);
+    4. X̃ = (S₁C)† (S₁ K S₂ᵀ) (Cᵀ S₂ᵀ)†  — only s² extra entries;
+    5. X̃₊ = Π_PSD(X̃)  (Theorem 2 keeps the (1+ε) bound after projection).
+
+    ``col_idx`` overrides step 1 (policy-driven selection —
+    ``repro.cur.symmetric_cur`` routes every ``repro.cur.selection`` policy
+    through here); ``sketches=(S₁, S₂)`` overrides steps 2–3 with pre-drawn
+    :class:`~repro.core.sketching.RowSampling` operators (shared randomness
+    with :mod:`repro.spsd.streaming` for the batch↔streaming parity tests).
+    """
+    _validate_sizes(n, c, s)
+    k_col, k_s1, k_s2 = jax.random.split(key, 3)
+    idx, C = _resolve_columns(k_col, oracle, n, c, col_idx)
+    if sketches is None:
+        S1, S2 = _leverage_pair(k_s1, k_s2, C, s)
+    else:
+        S1, S2 = _require_sampling(sketches)
+
+    S1C = S1.apply(C)  # (s, c) — rows of already-observed C, rescaled
+    CS2 = S2.apply(C).T  # (c, s)
+    S1KS2 = _sampled_block(oracle, S1, S2)  # s² fresh entries
+
+    X = fast_gmr_core(S1C, S1KS2, CS2)
+    return SPSDResult(
+        C=C, X=psd_project(X), col_idx=idx, entries_observed=n * c + s * s
+    )
+
+
+def spsd_error_ratio(K: jax.Array, res: SPSDResult) -> jax.Array:
+    """§6.2 metric: ||K − C X Cᵀ||_F / ||K||_F."""
+    dt = jnp.promote_types(K.dtype, jnp.float32)
+    approx = (res.C @ res.X @ res.C.T).astype(dt)
+    return jnp.linalg.norm(K.astype(dt) - approx) / jnp.linalg.norm(K.astype(dt))

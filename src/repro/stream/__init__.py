@@ -2,8 +2,11 @@
 
 One engine (:mod:`~repro.stream.engine`) owns the per-panel accumulator
 contract shared by the paper's streaming applications — single-pass SVD
-(Algorithm 3, :mod:`repro.core.svd`) and streaming CUR
-(:mod:`repro.cur.streaming`) — which plug in as :class:`PanelOps`. On top:
+(Algorithm 3, :mod:`repro.core.svd`), streaming CUR
+(:mod:`repro.cur.streaming`), and single-pass SPSD approximation
+(Algorithm 2, :mod:`repro.spsd.streaming`, via the **symmetric
+tied-operand mode**: ``PanelOps(symmetric=True)`` skips the R half and
+derives ``R = Cᵀ``) — which plug in as :class:`PanelOps`. On top:
 
 * :mod:`~repro.stream.distributed` — DP-sharded ingestion: bit-identical
   sketches per shared seed + disjoint panel ranges + psum/merge finalize
@@ -27,6 +30,7 @@ See ``docs/streaming.md`` for the architecture guide and
 from .engine import (
     PanelOps,
     PanelState,
+    copy_selected_columns,
     fresh_pytree,
     jitted_panel_update,
     padded_n,
@@ -53,7 +57,7 @@ from .adaptive import (
 __all__ = [
     "PanelOps", "PanelState", "panel_update", "jitted_panel_update",
     "stream_panels", "scan_chunk", "scan_panels", "fresh_pytree",
-    "padded_n", "truncated_R",
+    "padded_n", "copy_selected_columns", "truncated_R",
     "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
     "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "AdaptiveRowState",
     "adaptive_cur_finalize", "adaptive_cur_init",

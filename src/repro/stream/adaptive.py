@@ -77,6 +77,11 @@ never collide (disjoint-slot semantics); the merged result is a valid
 admission outcome but — unlike the fixed-index paths — not bitwise equal to
 single-host admission (workers score against their local basis only, and a
 worker's backfill can only reconstruct the column range it has seen).
+Because rows are global, two workers can admit the *same* heavy row; the
+post-merge ``merge_state`` hook (:func:`_merge_state`) consolidates such
+duplicates into the lowest-numbered slot (summing their disjoint-support
+``R`` rows) and frees the rest, so duplicate admissions no longer waste
+budget.
 """
 
 from __future__ import annotations
@@ -546,6 +551,63 @@ def _merge_ctx(ctxs):
     )
 
 
+def _merge_state(state: PanelState) -> PanelState:
+    """Post-merge cross-worker **row dedup** (engine ``merge_state`` hook).
+
+    Matrix rows are global — unlike the disjoint per-worker column ranges —
+    so two workers can admit the *same* heavy row into different slots, and
+    the merged state then spends two budget slots on one row (the
+    rank-deficient core solve absorbs the duplication, but the budget is
+    wasted). Reconciliation, entirely in the merged state:
+
+    * every filled slot's **canonical** slot is the lowest-numbered slot
+      holding the same row index;
+    * each duplicate slot's ``R`` row is **added into** its canonical slot —
+      workers consumed disjoint column ranges (and backfill only writes
+      inside a worker's seen range), so the duplicates' column supports are
+      disjoint and the sum is the union of what every admitting worker saw
+      of that row;
+    * the duplicate slots themselves are then zeroed and freed
+      (``row_idx``/``admit_off`` → −1, ``n_filled`` decremented), restoring
+      the unfilled-slot invariants the finalizer masks on.
+
+    Canonical-slot selection is deterministic, so the scan and per-panel
+    sharded drivers stay decision-for-decision equal. No-op when rows are
+    fixed (duplicates are then the caller's explicit choice) and on
+    single-host streams (in-stream admission already excludes admitted
+    rows, so duplicates cannot arise without a merge).
+    """
+    ctx = state.ctx
+    if ctx.rows is None:
+        return state
+    idx = ctx.row_idx
+    r = idx.shape[0]
+    filled = idx >= 0
+    same = (idx[:, None] == idx[None, :]) & filled[:, None] & filled[None, :]
+    canon = jnp.argmax(same, axis=0)  # lowest slot holding the same row
+    dup = filled & (canon != jnp.arange(r))
+    # T[i, j] = 1 ⇔ slot j's content lands in slot i. Duplicate slots are
+    # never anyone's canonical slot, so T @ R consolidates *and* zeroes
+    # them in one pass.
+    T = (jnp.arange(r)[:, None] == jnp.where(filled, canon, r)[None, :])
+    R = T.astype(state.R.dtype) @ state.R
+    rows = ctx.rows
+    # canonical slots keep the group's earliest admission offset
+    admit_grp = jnp.min(
+        jnp.where(same, rows.admit_off[None, :], jnp.iinfo(jnp.int32).max), axis=1
+    )
+    admit_off = jnp.where(dup, -1, jnp.where(filled, admit_grp, rows.admit_off))
+    rows = dataclasses.replace(
+        rows,
+        admit_off=admit_off.astype(jnp.int32),
+        n_filled=rows.n_filled - jnp.sum(dup).astype(jnp.int32),
+    )
+    ctx = dataclasses.replace(
+        ctx, row_idx=jnp.where(dup, -1, idx).astype(jnp.int32), rows=rows
+    )
+    return dataclasses.replace(state, R=R, ctx=ctx)
+
+
 def _collective_ctx(ctx: AdaptiveCURCtx, axis) -> AdaptiveCURCtx:
     """shard_map all-reduce mirror of :func:`_merge_ctx` (psum for the
     disjoint per-slot state, pmax for −1-sentinel index maps)."""
@@ -587,6 +649,7 @@ ADAPTIVE_CUR_OPS = PanelOps(
     bind_shard=_bind_shard,
     merge_ctx=_merge_ctx,
     collective_ctx=_collective_ctx,
+    merge_state=_merge_state,
 )
 
 

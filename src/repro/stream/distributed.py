@@ -30,7 +30,16 @@ Two execution modes share the same math:
 
 Application context that *does* diverge across workers (the adaptive-CUR
 admission state) is reconciled through the optional ``PanelOps`` hooks
-``prep_shard`` / ``bind_shard`` / ``merge_ctx`` / ``collective_ctx``.
+``prep_shard`` / ``bind_shard`` / ``merge_ctx`` / ``collective_ctx``, and
+cross-worker repairs that must see the merged *accumulators* (adaptive row
+dedup) run through ``merge_state`` after every merge path.
+
+Symmetric (tied-operand) streams — SPSD / kernel approximation with
+``R = Cᵀ`` (:mod:`repro.spsd.streaming`) — ride the same machinery
+unchanged: their ``R`` is the ``(0, n_pad)`` placeholder (merge-sum and
+psum are no-ops on it) while ``C`` and ``M`` obey the same
+disjoint-write/running-sum algebra, so sharded tied-operand ingestion
+reproduces the single-host factors exactly as well.
 """
 
 from __future__ import annotations
@@ -72,7 +81,12 @@ def _worker_state(state0: PanelState, ctx, lo: int) -> PanelState:
 
 
 def merge_states(states: Sequence[PanelState]) -> PanelState:
-    """Sum worker accumulators into the equivalent single-host state."""
+    """Sum worker accumulators into the equivalent single-host state.
+
+    When the application declares a ``merge_state`` hook (cross-worker
+    repairs that touch the accumulators, e.g. adaptive row dedup), it runs
+    last — after the accumulator sum and the ctx merge.
+    """
     states = list(states)
     base = states[0]
     C = sum((s.C for s in states[1:]), base.C)
@@ -82,9 +96,12 @@ def merge_states(states: Sequence[PanelState]) -> PanelState:
         ctx = base.ops.merge_ctx([s.ctx for s in states])
     else:
         ctx = base.ctx
-    return dataclasses.replace(
+    merged = dataclasses.replace(
         base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx
     )
+    if base.ops.merge_state is not None:
+        merged = base.ops.merge_state(merged)
+    return merged
 
 
 def _scan_range(st: PanelState, A: jax.Array, lo: int, hi: int, panel: int) -> PanelState:
@@ -148,7 +165,8 @@ def _fused_simulate(state0: PanelState, A: jax.Array, ranges, panel: int) -> Pan
                 if hi > lo:
                     st = dataclasses.replace(st, offset=jnp.asarray(lo, jnp.int32))
                     st = _scan_range(st, A, lo, hi, panel)
-        return dataclasses.replace(st, offset=jnp.asarray(state0.n, jnp.int32))
+        st = dataclasses.replace(st, offset=jnp.asarray(state0.n, jnp.int32))
+        return ops.merge_state(st) if ops.merge_state is not None else st
     worker_ctxs = []
     st = state0
     for w, (lo, hi) in enumerate(ranges):
@@ -161,9 +179,8 @@ def _fused_simulate(state0: PanelState, A: jax.Array, ranges, panel: int) -> Pan
             st = _scan_range(st, A, lo, hi, panel)
         worker_ctxs.append(st.ctx)
     ctx = ops.merge_ctx(worker_ctxs) if ops.merge_ctx is not None else state0.ctx
-    return dataclasses.replace(
-        st, ctx=ctx, offset=jnp.asarray(state0.n, jnp.int32)
-    )
+    st = dataclasses.replace(st, ctx=ctx, offset=jnp.asarray(state0.n, jnp.int32))
+    return ops.merge_state(st) if ops.merge_state is not None else st
 
 
 def simulate_sharded_stream(
@@ -262,14 +279,16 @@ def mesh_sharded_stream(
         ctx = st.ctx
         if ops.collective_ctx is not None:
             ctx = ops.collective_ctx(ctx, axis)
-        return dataclasses.replace(
+        st = dataclasses.replace(
             st,
             C=jax.lax.psum(st.C, axis),
-            R=jax.lax.psum(st.R, axis),
+            # symmetric streams carry the (0, n_pad) placeholder — nothing to reduce
+            R=jax.lax.psum(st.R, axis) if st.R.size else st.R,
             M=jax.lax.psum(st.M, axis),
             offset=jnp.asarray(n, jnp.int32),
             ctx=ctx,
         )
+        return ops.merge_state(st) if ops.merge_state is not None else st
 
     state_specs = jax.tree_util.tree_map(lambda _: P(), state0)
     out_specs = jax.tree_util.tree_map(lambda _: P(), state0)

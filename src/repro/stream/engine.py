@@ -13,6 +13,19 @@ retained, and three accumulators are maintained per panel
   ``M += (S_C A_L) · S_R[:, cols]ᵀ`` via the ``cols()`` sketch-window
   primitive of :mod:`repro.core.sketching`.
 
+**Symmetric (tied-operand) streams.** A :class:`PanelOps` may declare
+``symmetric=True`` for square streams where the row factor is *tied* to the
+column factor — SPSD / kernel matrices with ``R = Cᵀ``
+(:mod:`repro.spsd.streaming`, ``repro.cur.symmetric_cur``). The engine then
+skips the redundant R half of every panel update entirely: the state's ``R``
+is a zero-row placeholder ``(0, n_pad)`` (so the scan/donation/merge/psum
+machinery is untouched), :func:`truncated_R` *derives* ``R = Cᵀ`` from the
+column factor, and the per-panel work drops to the C update + the shared M
+accumulation. Both sketches of ``core_sketches`` live on the same
+``n``-dimensional operand space (one sketch family over one index set
+instead of two); they may still be independent draws — Algorithm 2's
+analysis requires ``S₁ ⊥ S₂``.
+
 This module owns that contract once. Applications plug in a
 :class:`PanelOps` — three pure functions describing how their ``C``
 contribution and ``R`` block are computed from a panel — and get the shared
@@ -56,8 +69,25 @@ __all__ = [
     "scan_panels",
     "padded_n",
     "fresh_pytree",
+    "copy_selected_columns",
     "truncated_R",
 ]
+
+
+def copy_selected_columns(col_idx, C, A_L, off):
+    """Slot-copy C update shared by the fixed-index plug-ins: every panel
+    column whose global index appears in ``col_idx`` lands in that slot.
+
+    ``off`` may be traced; out-of-panel (and −1-sentinel) slots pass
+    through unchanged. Used by streaming CUR (``repro.cur.streaming``) and
+    streaming SPSD (``repro.spsd.streaming``) so the panel window math
+    lives in one place.
+    """
+    L = A_L.shape[1]
+    rel = col_idx - off
+    in_panel = (rel >= 0) & (rel < L)
+    picked = jnp.take(A_L, jnp.clip(rel, 0, L - 1), axis=1)  # (m, c)
+    return jnp.where(in_panel[None, :], picked.astype(C.dtype), C)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,12 +139,35 @@ class PanelOps:
     bind_shard: Optional[Callable] = None
     merge_ctx: Optional[Callable] = None
     collective_ctx: Optional[Callable] = None
+    # merge_state(state) -> state — optional post-merge reconciliation run by
+    # every distributed driver AFTER the accumulators and ctx are merged
+    # (in-process merge, fused simulate, and the shard_map body alike). Unlike
+    # merge_ctx it sees the full PanelState, so cross-worker repairs that
+    # touch the accumulators — e.g. the adaptive row-admission dedup zeroing
+    # duplicate R rows (repro.stream.adaptive) — live here. Must be
+    # jit-traceable and deterministic (the mesh path evaluates it replicated
+    # on every shard).
+    merge_state: Optional[Callable] = None
+    # Tied-operand (symmetric) stream: the row factor is R = Cᵀ by
+    # definition (SPSD / kernel matrices), so the engine skips the R half of
+    # every panel update and `truncated_R` derives R from C. Symmetric ops
+    # must not declare r_block/update_r, and their state's R must be the
+    # (0, n_pad) placeholder.
+    symmetric: bool = False
 
     def __post_init__(self):
-        """Fail fast at construction: the R update must come from exactly
-        one of ``r_block`` / ``update_r`` (a missing hook would otherwise
-        surface as an opaque NoneType call inside the jitted step)."""
-        if (self.r_block is None) == (self.update_r is None):
+        """Fail fast at construction: a symmetric (tied-operand) ops derives
+        ``R = Cᵀ`` and must not declare an R hook; otherwise the R update
+        must come from exactly one of ``r_block`` / ``update_r`` (a missing
+        hook would surface as an opaque NoneType call inside the jitted
+        step)."""
+        if self.symmetric:
+            if self.r_block is not None or self.update_r is not None:
+                raise ValueError(
+                    f"PanelOps {self.name!r} is symmetric (R = Cᵀ is derived); "
+                    "it must not declare r_block / update_r"
+                )
+        elif (self.r_block is None) == (self.update_r is None):
             raise ValueError(
                 f"PanelOps {self.name!r} needs exactly one of r_block / update_r"
             )
@@ -198,7 +251,9 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
         ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off)
     else:
         ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off, scores)
-    if ops.update_r is not None:
+    if ops.symmetric:
+        R = state.R  # tied operand: R = Cᵀ is derived, nothing to accumulate
+    elif ops.update_r is not None:
         R = ops.update_r(ctx, state.R, A_L, off)
     else:
         r_blk = ops.r_block(ctx, A_L, off).astype(state.R.dtype)
@@ -325,5 +380,12 @@ def stream_panels(
 
 
 def truncated_R(state: PanelState) -> jax.Array:
-    """``R`` restricted to the true (unpadded) column range."""
+    """``R`` restricted to the true (unpadded) column range.
+
+    For symmetric (tied-operand) streams the engine never accumulates R —
+    it is *derived* here as ``Cᵀ`` (``C`` rows are never padded, so no
+    truncation is needed).
+    """
+    if state.ops.symmetric:
+        return state.C.T
     return state.R[:, : state.n]

@@ -216,6 +216,26 @@ def scenario_stream_sharded_equals_single():
         ci = np.asarray(res2.col_idx)
         filled = ci[ci >= 0]
         assert len(np.unique(filled)) == len(filled), (W, ci)
+        ri2 = np.asarray(res2.row_idx)
+        filled_r = ri2[ri2 >= 0]  # cross-worker row dedup holds under psum too
+        assert len(np.unique(filled_r)) == len(filled_r), (W, ri2)
+
+    # symmetric (tied-operand) streaming SPSD: mesh psum == single-host,
+    # with the (0, n_pad) R placeholder riding the shard_map untouched
+    from repro.spsd import streaming_spsd_finalize, streaming_spsd_init
+
+    nk = 256
+    G = powerlaw_matrix(jax.random.key(8), nk, 48, 1.0)
+    K = G @ G.T + 0.01 * jnp.eye(nk)
+    ki = jnp.asarray([3, 40, 99, 120, 200, 7, 31, 88], jnp.int32)
+
+    def kinit():
+        return streaming_spsd_init(jax.random.key(9), nk, ki, s=64, panel=panel)
+
+    ks = streaming_spsd_finalize(stream_panels(kinit(), K, panel))
+    km = streaming_spsd_finalize(mesh_sharded_stream(kinit(), K, panel, mesh))
+    np.testing.assert_array_equal(np.asarray(ks.C), np.asarray(km.C))
+    np.testing.assert_allclose(np.asarray(km.X), np.asarray(ks.X), atol=2e-3)
     print("OK scenario_stream_sharded_equals_single")
 
 

@@ -64,10 +64,75 @@ def test_core_is_psd(kernel_setup):
 
 
 def test_entry_observation_accounting(kernel_setup):
-    """Theorem 3: N = nc + s² entries."""
+    """Theorem 3 / Table 4: exact entry counts for all four batch paths."""
     n, oracle, K = kernel_setup
     c, s = 30, 150
-    res = faster_spsd(jax.random.key(6), oracle, n, c, s)
-    assert res.entries_observed == n * c + s * s
-    res2 = nystrom(jax.random.key(7), oracle, n, c)
-    assert res2.entries_observed == n * c
+    assert faster_spsd(jax.random.key(6), oracle, n, c, s).entries_observed == n * c + s * s
+    assert nystrom(jax.random.key(7), oracle, n, c).entries_observed == n * c
+    assert fast_spsd_wang(jax.random.key(8), oracle, n, c, s).entries_observed == n * c + s * s
+    assert optimal_core(jax.random.key(9), oracle, n, c).entries_observed == n * n
+
+
+# ---------------------------------------------------------------------------
+# input validation + edge cases (rank-deficient kernels, duplicate samples)
+# ---------------------------------------------------------------------------
+
+
+def test_sample_size_validation(kernel_setup):
+    """c > n (or c ≤ 0, s ≤ 0) must fail with a clear ValueError, not the
+    opaque shape error jax.random.choice(replace=False) raises."""
+    n, oracle, _ = kernel_setup
+    for fn in (
+        lambda: nystrom(jax.random.key(0), oracle, n, n + 1),
+        lambda: optimal_core(jax.random.key(0), oracle, n, 0),
+        lambda: fast_spsd_wang(jax.random.key(0), oracle, n, n + 5, 100),
+        lambda: faster_spsd(jax.random.key(0), oracle, n, -1, 100),
+    ):
+        with pytest.raises(ValueError, match="0 < c <= n"):
+            fn()
+    for fn in (
+        lambda: fast_spsd_wang(jax.random.key(0), oracle, n, 10, 0),
+        lambda: faster_spsd(jax.random.key(0), oracle, n, 10, -3),
+    ):
+        with pytest.raises(ValueError, match="s > 0"):
+            fn()
+
+
+def test_rank_deficient_kernel_duplicated_points():
+    """Duplicated data points make K (and any sampled C) exactly
+    rank-deficient; every batch path must stay finite with a sane fit."""
+    n, d = 300, 16
+    X = clustered_points(jax.random.key(40), n, d, n_clusters=8, spread=0.5)
+    X = X.at[50:100].set(X[0])  # 51 identical points
+    sigma = tune_rbf_sigma(X, k=10, target_eta=0.75)
+    oracle = rbf_kernel_oracle(X, sigma)
+    K = oracle(None, None)
+    c, s = 24, 120
+    for fn in (
+        lambda k: nystrom(k, oracle, n, c),
+        lambda k: optimal_core(k, oracle, n, c),
+        lambda k: fast_spsd_wang(k, oracle, n, c, s),
+        lambda k: faster_spsd(k, oracle, n, c, s),
+    ):
+        res = fn(jax.random.key(41))
+        assert bool(jnp.all(jnp.isfinite(res.X))), fn
+        err = float(spsd_error_ratio(K, res))
+        assert np.isfinite(err) and err < 1.0, (fn, err)
+
+
+def test_duplicate_leverage_samples_survive(kernel_setup):
+    """s ≫ n forces duplicate sampled indices in S₁/S₂ (sampling is with
+    replacement) and near-duplicate rows in the sketched operands; the
+    floored solves must stay finite and the PSD projection must hold for
+    both leverage-sampling paths."""
+    n, oracle, K = kernel_setup
+    c, s = 30, 2 * n  # pigeonhole: every index set has duplicates
+    for fn in (
+        lambda k: fast_spsd_wang(k, oracle, n, c, s),
+        lambda k: faster_spsd(k, oracle, n, c, s),
+    ):
+        res = fn(jax.random.key(42))
+        assert bool(jnp.all(jnp.isfinite(res.X)))
+        ev = jnp.linalg.eigvalsh(0.5 * (res.X + res.X.T))
+        assert float(ev.min()) > -1e-4
+        assert float(spsd_error_ratio(K, res)) < 1.0

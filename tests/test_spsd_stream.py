@@ -1,0 +1,316 @@
+"""Symmetric (tied-operand) streaming subsystem: engine contract, streaming
+SPSD ↔ batch parity (single-host + DP-sharded), adaptive kernel-column
+admission, and symmetric CUR over every selection policy."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sketching import CountSketch, RowSampling
+from repro.cur import (
+    SELECTION_POLICIES,
+    cur_relative_error,
+    spsd_to_cur,
+    symmetric_cur,
+)
+from repro.spsd import (
+    adaptive_spsd_finalize,
+    adaptive_spsd_init,
+    faster_spsd,
+    leverage_sampling_sketches,
+    matrix_oracle,
+    spsd_error_ratio,
+    streaming_spsd_finalize,
+    streaming_spsd_init,
+)
+from repro.stream import (
+    PanelOps,
+    simulate_sharded_stream,
+    stream_panels,
+    truncated_R,
+)
+
+N = 240
+
+
+@pytest.fixture(scope="module")
+def K():
+    """Low-rank-plus-ridge SPSD matrix with localized heavy structure."""
+    base = 0.01 * jax.random.normal(jax.random.key(0), (N, 64))
+    K = base @ base.T + 0.001 * jnp.eye(N)
+    for i, p in enumerate(_SPIKES):
+        v = jnp.zeros((N,)).at[p].set(1.0) + 0.05 * jax.random.normal(
+            jax.random.key(10 + i), (N,)
+        )
+        K = K + 9.0 * jnp.outer(v, v)
+    return K
+
+
+_SPIKES = (17, 60, 133, 201)
+
+
+# ---------------------------------------------------------------------------
+# engine: symmetric PanelOps contract
+# ---------------------------------------------------------------------------
+
+
+def test_symmetric_ops_reject_r_hooks():
+    """A symmetric ops derives R = Cᵀ — declaring an R hook is a bug."""
+    with pytest.raises(ValueError, match="symmetric"):
+        PanelOps(
+            name="bad",
+            core_sketches=lambda ctx: (None, None),
+            update_c=lambda *a: a[:2],
+            r_block=lambda *a: None,
+            symmetric=True,
+        )
+    # and the non-symmetric exactly-one rule is unchanged
+    with pytest.raises(ValueError, match="exactly one"):
+        PanelOps(
+            name="bad2", core_sketches=lambda ctx: (None, None), update_c=lambda *a: a[:2]
+        )
+
+
+def test_symmetric_truncated_r_is_c_transpose(K):
+    """truncated_R derives the tied row factor; the stored R stays the
+    (0, n_pad) placeholder through streaming (scan and per-panel alike)."""
+    ci = jnp.asarray([3, 17, 60, 99], jnp.int32)
+    for jit in ("scan", "per-panel"):
+        st = streaming_spsd_init(jax.random.key(1), N, ci, s=48, panel=50)
+        st = stream_panels(st, K, 50, jit=jit)  # 240 = 4×50 + ragged 40
+        assert st.R.shape[0] == 0
+        np.testing.assert_array_equal(truncated_R(st), st.C.T)
+        np.testing.assert_array_equal(st.C, jnp.take(K, ci, axis=1))
+
+
+def test_rowsampling_window_slices_match_dense():
+    """RowSampling.cols/pad_cols obey the engine's exact window contract:
+    windowed apply_t equals the dense slice, and windows past the true
+    source dim contribute nothing."""
+    S = RowSampling.draw(jax.random.key(2), 16, 100)
+    A = jax.random.normal(jax.random.key(3), (7, 100))
+    dense = S.materialize()
+    for off, size in ((0, 30), (30, 30), (90, 10)):
+        got = S.cols(off, size).apply_t(A[:, off : off + size])
+        np.testing.assert_allclose(
+            got, A[:, off : off + size] @ dense[:, off : off + size].T, atol=1e-5
+        )
+    padded = S.pad_cols(128)
+    tail = padded.cols(100, 28).apply_t(jnp.ones((7, 28)))
+    np.testing.assert_array_equal(tail, jnp.zeros((7, 16)))
+
+
+# ---------------------------------------------------------------------------
+# streaming SPSD ↔ batch Algorithm 2 parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _shared_pieces(K, c=20, s=120):
+    """One (col_idx, S₁, S₂) draw shared by the batch and streaming paths."""
+    idx = jax.random.choice(jax.random.key(4), N, (c,), replace=False).astype(jnp.int32)
+    C = jnp.take(K, idx, axis=1)
+    S1, S2 = leverage_sampling_sketches(jax.random.key(5), C, s)
+    return idx, (S1, S2)
+
+
+def test_streaming_matches_batch_faster_spsd(K):
+    """Acceptance: streamed X == batch faster_spsd X on the same sampled
+    columns and the same leverage-sampling sketch pair — each M entry gets
+    exactly one nonzero panel contribution, so the match is essentially
+    exact, ragged tails included."""
+    idx, sketches = _shared_pieces(K)
+    res_b = faster_spsd(
+        jax.random.key(6), matrix_oracle(K), N, idx.shape[0], sketches[0].s,
+        col_idx=idx, sketches=sketches,
+    )
+    scale = float(jnp.max(jnp.abs(res_b.X)))
+    for panel in (60, 64):  # dividing and ragged (240 = 3×64 + 48)
+        st = streaming_spsd_init(jax.random.key(7), N, idx, sketches=sketches, panel=panel)
+        res_s = streaming_spsd_finalize(stream_panels(st, K, panel))
+        np.testing.assert_array_equal(res_s.C, res_b.C)
+        np.testing.assert_allclose(res_s.X, res_b.X, atol=1e-4 * scale)
+        err_b = float(spsd_error_ratio(K, res_b))
+        err_s = float(spsd_error_ratio(K, res_s))
+        assert abs(err_b - err_s) < 1e-4, (err_b, err_s)
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_streaming_spsd_sharded_parity(K, workers):
+    """Acceptance: DP-sharded tied-operand ingestion == single-host (the
+    hook-less symmetric ops chain exactly; R placeholder rides untouched)."""
+    idx, sketches = _shared_pieces(K)
+
+    def init():
+        return streaming_spsd_init(jax.random.key(8), N, idx, sketches=sketches, panel=40)
+
+    single = streaming_spsd_finalize(stream_panels(init(), K, 40))
+    shard = streaming_spsd_finalize(simulate_sharded_stream(init(), K, 40, workers))
+    np.testing.assert_array_equal(shard.C, single.C)
+    np.testing.assert_allclose(shard.X, single.X, atol=2e-5)
+
+
+def test_streaming_spsd_scan_parity(K):
+    """Scan-compiled driver vs the per-panel jitted oracle, symmetric ops."""
+    idx, sketches = _shared_pieces(K)
+
+    def init():
+        return streaming_spsd_init(jax.random.key(9), N, idx, sketches=sketches, panel=64)
+
+    ref = stream_panels(init(), K, 64, jit="per-panel")
+    got = stream_panels(init(), K, 64, jit="scan")
+    np.testing.assert_array_equal(got.C, ref.C)
+    np.testing.assert_allclose(got.M, ref.M, atol=2e-4)
+    assert int(got.offset) == int(ref.offset)
+
+
+def test_streaming_init_validation():
+    """The streaming inits enforce the same clear-ValueError convention as
+    the batch paths: in-range col_idx, 0 < c ≤ n, s > 0."""
+    with pytest.raises(ValueError, match="col_idx entries"):
+        streaming_spsd_init(jax.random.key(0), N, jnp.asarray([0, N]), panel=40)
+    with pytest.raises(ValueError, match="col_idx entries"):
+        streaming_spsd_init(jax.random.key(0), N, jnp.asarray([-1, 5]), panel=40)
+    with pytest.raises(ValueError, match="0 < c <= n"):
+        adaptive_spsd_init(jax.random.key(0), N, 0, panel=40)
+    with pytest.raises(ValueError, match="0 < c <= n"):
+        adaptive_spsd_init(jax.random.key(0), N, N + 1, panel=40)
+    with pytest.raises(ValueError, match="s > 0"):
+        adaptive_spsd_init(jax.random.key(0), N, 8, s=-3, panel=40)
+
+
+def test_streaming_spsd_core_is_psd(K):
+    """Theorem 2: the projected streamed core is PSD."""
+    idx, sketches = _shared_pieces(K)
+    st = streaming_spsd_init(jax.random.key(10), N, idx, sketches=sketches, panel=64)
+    res = streaming_spsd_finalize(stream_panels(st, K, 64))
+    ev = jnp.linalg.eigvalsh(0.5 * (res.X + res.X.T))
+    assert float(ev.min()) > -1e-4
+    assert res.entries_observed == N * N  # every entry streamed through once
+
+
+# ---------------------------------------------------------------------------
+# adaptive kernel-column admission (stream/adaptive.py hook reuse)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_spsd_admits_spiked_kernel_columns(K):
+    """The adaptive residual scorer applied to kernel columns captures the
+    planted heavy columns and beats fixed-uniform streaming SPSD at equal
+    (c, s) budget."""
+    st = adaptive_spsd_init(jax.random.key(11), N, 8, s=96, panel=40, panel_cap=2)
+    res = adaptive_spsd_finalize(stream_panels(st, K, 40))
+    admitted = set(np.asarray(res.col_idx).tolist())
+    assert set(_SPIKES) <= admitted, sorted(admitted)
+    err_a = float(spsd_error_ratio(K, res))
+    ci = jax.random.choice(jax.random.key(12), N, (8,), replace=False)
+    stu = streaming_spsd_init(jax.random.key(13), N, ci, s=96, panel=40)
+    err_u = float(spsd_error_ratio(K, streaming_spsd_finalize(stream_panels(stu, K, 40))))
+    assert err_a < err_u, (err_a, err_u)
+
+
+def test_adaptive_spsd_unfilled_slots_are_inert():
+    """A kernel with less structure than budget leaves slots unfilled —
+    col_idx −1, zero C columns, zero X rows/cols, core still PSD/finite."""
+    B = 0.01 * jax.random.normal(jax.random.key(14), (N, 32))
+    K = B @ B.T + 1e-4 * jnp.eye(N)
+    v = jnp.zeros((N,)).at[13].set(1.0)
+    K = K + 9.0 * jnp.outer(v, v)
+    st = adaptive_spsd_init(
+        jax.random.key(15), N, 6, s=64, panel=40, panel_cap=1, min_gain=5.0
+    )
+    res = adaptive_spsd_finalize(stream_panels(st, K, 40))
+    idx = np.asarray(res.col_idx)
+    assert (idx == -1).any() and 13 in idx.tolist()
+    unfilled = idx == -1
+    assert bool(jnp.all(jnp.isfinite(res.X)))
+    np.testing.assert_allclose(np.asarray(res.X)[unfilled, :], 0.0)
+    np.testing.assert_allclose(np.asarray(res.X)[:, unfilled], 0.0)
+    np.testing.assert_allclose(np.asarray(res.C)[:, unfilled], 0.0)
+    ev = jnp.linalg.eigvalsh(0.5 * (res.X + res.X.T))
+    assert float(ev.min()) > -1e-4
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_adaptive_spsd_sharded_still_finds_spikes(K, workers):
+    """Sharded adaptive SPSD (disjoint per-worker slot ranges on the
+    symmetric engine) still captures the heavy kernel columns."""
+    st = adaptive_spsd_init(jax.random.key(16), N, 8, s=96, panel=40, panel_cap=1)
+    res = adaptive_spsd_finalize(simulate_sharded_stream(st, K, 40, workers))
+    admitted = set(np.asarray(res.col_idx).tolist())
+    missed = set(_SPIKES) - admitted
+    assert len(missed) <= 1, sorted(admitted)
+    assert float(spsd_error_ratio(K, res)) < 0.1
+
+
+def test_adaptive_spsd_scan_parity(K):
+    """Adaptive symmetric stream: scan carry (full AdaptiveCURCtx, no rows)
+    matches the per-panel driver decision-for-decision."""
+
+    def init():
+        return adaptive_spsd_init(
+            jax.random.key(17), N, 8, s=96, panel=40, panel_cap=2, swap_gain=2.0
+        )
+
+    ref = stream_panels(init(), K, 40, jit="per-panel")
+    got = stream_panels(init(), K, 40, jit="scan")
+    np.testing.assert_array_equal(got.ctx.col_idx, ref.ctx.col_idx)
+    assert int(got.ctx.n_evicted) == int(ref.ctx.n_evicted)
+    np.testing.assert_allclose(got.M, ref.M, atol=2e-4)
+    np.testing.assert_allclose(got.ctx.ScC, ref.ctx.ScC, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# symmetric CUR (R = Cᵀ) over every selection policy (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", SELECTION_POLICIES)
+def test_symmetric_cur_quality_per_policy(K, policy):
+    """Every cur/selection policy drives a valid symmetric factorization:
+    PSD core, sane error, Theorem-3 entry accounting, and the CUR adapter
+    reproduces the same fit with R = Cᵀ tied."""
+    c = 12
+    res = symmetric_cur(jax.random.key(18), K, c, policy=policy)
+    err = float(spsd_error_ratio(K, res))
+    assert np.isfinite(err) and err < 0.15, (policy, err)
+    ev = jnp.linalg.eigvalsh(0.5 * (res.X + res.X.T))
+    assert float(ev.min()) > -1e-4
+    assert res.entries_observed == N * c + min(10 * c, N) ** 2
+    cur = spsd_to_cur(res)
+    np.testing.assert_array_equal(cur.R, res.C.T)
+    np.testing.assert_array_equal(cur.row_idx, cur.col_idx)
+    assert abs(float(cur_relative_error(K, cur)) - err) < 1e-5
+
+
+def test_symmetric_cur_exact_core(K):
+    """method="exact" returns the PSD-projected oracle core at n² entries."""
+    res = symmetric_cur(jax.random.key(19), K, 12, policy="leverage", method="exact")
+    assert res.entries_observed == N * N
+    assert float(spsd_error_ratio(K, res)) < 0.15
+
+
+def test_symmetric_cur_validation(K):
+    with pytest.raises(ValueError, match="square"):
+        symmetric_cur(jax.random.key(20), K[:, :100], 8)
+    with pytest.raises(ValueError, match="col_idx"):
+        symmetric_cur(jax.random.key(21), K)
+    with pytest.raises(ValueError, match="unknown method"):
+        symmetric_cur(jax.random.key(22), K, 8, method="bogus")
+
+
+# ---------------------------------------------------------------------------
+# batch sketch-injection guard
+# ---------------------------------------------------------------------------
+
+
+def test_batch_sketch_injection_requires_sampling(K):
+    """The entry-oracle contract: dense sketches would need n² oracle
+    entries, so injection is restricted to RowSampling operators."""
+    S = CountSketch.draw(jax.random.key(23), 64, N)
+    with pytest.raises(TypeError, match="RowSampling"):
+        faster_spsd(
+            jax.random.key(24), matrix_oracle(K), N, 8, 64, sketches=(S, S)
+        )

@@ -429,6 +429,43 @@ def test_v2_sharded_parity_eviction_and_rows(workers):
         assert len(np.unique(filled)) == len(filled)
 
 
+def test_cross_worker_row_dedup():
+    """ROADMAP open item: rows are global, so two workers admit the same
+    heavy row into different slots. The merge_state hook must consolidate
+    the duplicates into the lowest slot (summing their disjoint-support R
+    pieces — here recovering the *full* row exactly) and free the rest,
+    on the scan and per-panel sharded drivers alike."""
+    m, n, panel = 200, 240, 40
+    A = 0.02 * jax.random.normal(jax.random.key(400), (m, n))
+    # rows 77/131 are heavy across the whole stream → every worker admits them
+    A = A.at[77, :].add(8.0 * jax.random.normal(jax.random.key(401), (n,)))
+    A = A.at[131, :].add(5.0 * jax.random.normal(jax.random.key(402), (n,)))
+    for jit in ("scan", "per-panel"):
+        st = adaptive_cur_init(
+            jax.random.key(403), m, n, 6, None, r=4, sketch="countsketch",
+            panel=panel, panel_cap=1, panel_cap_rows=1,
+        )
+        st_out = simulate_sharded_stream(st, A, panel, 2, jit=jit)
+        res = adaptive_cur_finalize(st_out)
+        idx = np.asarray(res.row_idx)
+        filled = idx[idx >= 0]
+        assert len(np.unique(filled)) == len(filled), (jit, idx)
+        assert {77, 131} <= set(filled.tolist()), (jit, idx)
+        # consolidation: the kept slot holds the union of both workers'
+        # column ranges — the complete true row, not a half-zeroed one
+        slot = int(np.where(idx == 77)[0][0])
+        np.testing.assert_allclose(
+            np.asarray(res.R)[slot], np.asarray(A)[77], atol=1e-5
+        )
+        # freed slots are fully inert: zero R rows, zero U columns, and the
+        # filled-count accounting reflects the dedup
+        unfilled = idx == -1
+        np.testing.assert_allclose(np.asarray(res.R)[unfilled], 0.0)
+        np.testing.assert_allclose(np.asarray(res.U)[:, unfilled], 0.0)
+        assert int(st_out.ctx.rows.n_filled) == len(filled), jit
+        assert bool(jnp.all(jnp.isfinite(res.U)))
+
+
 def test_v2_shard_budget_must_divide():
     """prep_shard refuses budgets that don't split across workers."""
     st = adaptive_cur_init(
