@@ -3,12 +3,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all smoke bench docs-check perf-check
+.PHONY: test test-slow test-all smoke bench docs-check perf-check obs-check
 
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
 
-docs-check:  ## docstring audit (repro.stream/repro.cur) + docs/paper_map.md anchors
+docs-check:  ## docstring audit (repro.stream/cur/spsd/obs) + docs/paper_map.md anchors
 	$(PY) tools/check_docstrings.py
 
 test-slow:  ## heavy sweeps + multi-device subprocess scenarios
@@ -27,6 +27,12 @@ perf-check:  ## regenerate the smoke benches and gate vs benchmarks/baselines/
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_stream.json
 	$(PY) -m benchmarks.spsd_approx --smoke --out-dir /tmp/perf-check
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_spsd.json
+
+obs-check:  ## telemetry acceptance: <=1.3x paired-row overhead + HLO/bitwise identity
+	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/obs-check
+	$(PY) -m benchmarks.check_regression --fresh /tmp/obs-check/BENCH_stream.json \
+	    --overhead-suffix "+tel" --overhead-threshold 1.3
+	$(PY) -m pytest -q tests/test_obs.py -k "hlo or bitwise"
 
 bench:  ## full benchmark harness, CSV on stdout
 	$(PY) -m benchmarks.run

@@ -16,10 +16,22 @@ instead (meaningful when fresh and baseline come from the same machine,
 e.g. ``make perf-check`` on the dev container after regenerating the
 baseline there).
 
-Rows present on only one side are reported but do not fail the gate
-(scenarios may be added/renamed); a smoke artifact is only comparable to
-the smoke baseline (different shapes), so mismatched ``meta.smoke`` flags
-are an error.
+Rows the fresh artifact has but the baseline lacks are reported and pass
+(new scenarios land before their baseline is regenerated); a baseline row
+**missing from the fresh artifact fails the gate** with an explicit
+message — a silently dropped row is indistinguishable from a deleted
+scenario, and the stale-baseline drift it causes is exactly what this
+gate exists to catch (regenerate the baselines after intentional
+renames). A smoke artifact is only comparable to the smoke baseline
+(different shapes), so mismatched ``meta.smoke`` flags are an error.
+
+``--overhead-suffix SUFFIX`` switches to a *within-artifact* gate: every
+timed row whose name contains ``SUFFIX`` is paired with the row named
+``name.replace(SUFFIX, "")`` in the **same** artifact and their ratio is
+checked against ``--overhead-threshold`` (default 1.3×). No baseline is
+involved, so the check is host-invariant by construction — used by
+``make obs-check`` to enforce the ≤1.3× telemetry-overhead acceptance on
+the ``stream/cur/.../adaptive+tel/w<W>`` rows.
 
 The gate is artifact-generic: the committed snapshot is resolved from the
 artifact's own ``bench`` name and smoke flag
@@ -111,7 +123,40 @@ def compare(fresh: dict, baseline: dict, threshold: float, absolute: bool = Fals
     for name in sorted(set(fresh_rows) - set(base_rows)):
         print(f"  new   {name}: {fresh_rows[name]:.1f}us (no baseline)")
     for name in sorted(set(base_rows) - set(fresh_rows)):
-        print(f"  gone  {name}: baseline-only row")
+        print(f"  GONE  {name}: baseline row missing from fresh artifact")
+        violations.append(
+            f"{name}: baseline row missing from fresh artifact — scenario "
+            "dropped or renamed? regenerate the committed baseline if intentional"
+        )
+    return violations
+
+
+def check_overhead(artifact: dict, suffix: str, threshold: float) -> list:
+    """Within-artifact overhead gate: every timed ``…SUFFIX…`` row vs its
+    suffix-stripped twin. Returns violation strings (empty = gate passes)."""
+    rows = _timed_rows(artifact)
+    violations, pairs = [], 0
+    for name in sorted(rows):
+        if suffix not in name:
+            continue
+        base = name.replace(suffix, "")
+        if base not in rows:
+            violations.append(f"{name}: no paired row {base!r} in the artifact")
+            continue
+        pairs += 1
+        ratio = rows[name] / max(rows[base], 1e-9)
+        status = "FAIL" if ratio > threshold else "ok"
+        print(
+            f"  {status:>4}  {name}: {rows[name]:.1f}us vs {base} "
+            f"{rows[base]:.1f}us ({ratio:.2f}x overhead)"
+        )
+        if ratio > threshold:
+            violations.append(f"{name}: {ratio:.2f}x > {threshold}x overhead")
+    if pairs == 0:
+        violations.append(
+            f"no timed row pairs with suffix {suffix!r} — nothing to gate "
+            "(did the benchmark drop its telemetered configs?)"
+        )
     return violations
 
 
@@ -128,6 +173,15 @@ def main() -> int:
         "--update-smoke-baseline", metavar="ARTIFACT", default=None,
         help="copy ARTIFACT over the committed smoke baseline and exit",
     )
+    ap.add_argument(
+        "--overhead-suffix", default=None, metavar="SUFFIX",
+        help="within-artifact mode: gate each ...SUFFIX... row against its "
+             "suffix-stripped twin instead of comparing to a baseline",
+    )
+    ap.add_argument(
+        "--overhead-threshold", type=float, default=1.3,
+        help="max allowed paired-row overhead ratio for --overhead-suffix",
+    )
     args = ap.parse_args()
     if args.update_smoke_baseline:
         os.makedirs(BASELINE_DIR, exist_ok=True)
@@ -137,6 +191,19 @@ def main() -> int:
         print(f"updated {dst}")
         return 0
     fresh = _load(args.fresh)
+    if args.overhead_suffix:
+        print(
+            f"check_regression: {args.fresh} within-artifact overhead gate "
+            f"(suffix {args.overhead_suffix!r}, threshold {args.overhead_threshold}x)"
+        )
+        violations = check_overhead(fresh, args.overhead_suffix, args.overhead_threshold)
+        if violations:
+            print(f"check_regression: {len(violations)} overhead violation(s)")
+            for v in violations:
+                print(f"  - {v}")
+            return 1
+        print("check_regression: OK")
+        return 0
     baseline_path = args.baseline or baseline_path_for(fresh)
     if not os.path.exists(baseline_path):
         print(f"check_regression: no baseline at {baseline_path} — failing (commit one)")

@@ -1,6 +1,8 @@
 """Shared benchmark utilities: timing, synthetic matrices, CSV rows, and
-the standard ``BENCH_<module>.json`` artifact writer (adopted by
-``cur_decomp``; wiring the remaining modules through it is open)."""
+the standard ``BENCH_<module>.json`` artifact writer (every table/figure
+module — ``gmr_error``, ``cur_decomp``, ``spsd_approx``,
+``single_pass_svd``, ``sketch_perf``, ``stream_bench`` — writes through
+it; ``check_regression`` gates any artifact with a committed baseline)."""
 
 from __future__ import annotations
 

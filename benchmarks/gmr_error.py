@@ -7,9 +7,13 @@ Claim validated: error ratio ∝ 1/a²  (⇔ sketch size ∝ ε^{-1/2}, Theorem 
 
 Datasets: offline container → synthetic matrices with matched spectral /
 sparsity profiles (see DESIGN.md §8).
+
+  PYTHONPATH=src python -m benchmarks.gmr_error [--smoke]
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +21,7 @@ import numpy as np
 
 from repro.core import error_ratio, exact_gmr, fast_gmr, rho
 
-from .common import powerlaw_matrix, sparse_matrix, time_call
+from .common import powerlaw_matrix, sparse_matrix, time_call, write_bench_json
 
 
 DATASETS = {
@@ -68,3 +72,20 @@ def run(trials: int = 3, quick: bool = False) -> list:
             "derived": f"err_x_a2_spread={spread:.2f}(≲4 validates Thm1 eps^-1/2)",
         })
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="reduced a-sweep, 1 trial (CI)")
+    ap.add_argument("--out-dir", default=None, help="where to write BENCH_gmr_error.json")
+    args = ap.parse_args()
+    rows = run(trials=1 if args.smoke else 3, quick=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
+    path = write_bench_json("gmr_error", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

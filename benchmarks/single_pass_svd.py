@@ -8,9 +8,13 @@ Fast SP-SVD (**Algorithm 3**, streaming) vs Practical SP-SVD (Tropp et al.
 Claim validated: Fast SP-SVD ≪ Practical SP-SVD at equal sketch budget,
 dramatically so at small budgets (§5.3's ill-conditioning of N' at c = r);
 we also report Tropp's recommended asymmetric r = 2c allocation.
+
+  PYTHONPATH=src python -m benchmarks.single_pass_svd [--smoke]
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +22,7 @@ import numpy as np
 
 from repro.core import fast_sp_svd, practical_sp_svd, svd_error_ratio
 
-from .common import powerlaw_matrix, sparse_matrix, time_call
+from .common import powerlaw_matrix, sparse_matrix, time_call, write_bench_json
 
 
 DATASETS = {
@@ -62,3 +66,20 @@ def run(trials: int = 2, quick: bool = False) -> list:
                 ),
             })
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="reduced budget sweep, 1 trial (CI)")
+    ap.add_argument("--out-dir", default=None, help="where to write BENCH_spsvd_compare.json")
+    args = ap.parse_args()
+    rows = run(trials=1 if args.smoke else 2, quick=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
+    path = write_bench_json("spsvd_compare", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

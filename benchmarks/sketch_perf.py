@@ -6,9 +6,13 @@ the ref oracle, (ii) XLA wall-time of the oracle path (the deployable CPU
 fallback), and (iii) the *structural* HBM-traffic model of the fused
 kernel vs the sequential evaluation — the quantity that decides TPU perf
 (memory-bound regime; see kernels/twoside_sketch.py docstring).
+
+  PYTHONPATH=src python -m benchmarks.sketch_perf [--smoke]
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +27,7 @@ from repro.kernels import (
     twoside_sketch_ref,
 )
 
-from .common import time_call
+from .common import time_call, write_bench_json
 
 
 def _traffic_model(m, n, s_c, s_r, dtype_bytes=2):
@@ -123,3 +127,20 @@ def run(trials: int = 3, quick: bool = False) -> list:
             "derived": f"pallas_rel_err={rel:.2e};hbm_passes_over_A=1",
         })
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="single shape per kernel (CI)")
+    ap.add_argument("--out-dir", default=None, help="where to write BENCH_kernels.json")
+    args = ap.parse_args()
+    rows = run(trials=1 if args.smoke else 3, quick=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
+    path = write_bench_json("kernels", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

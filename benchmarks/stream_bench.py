@@ -17,8 +17,20 @@ Rows (→ ``BENCH_stream.json`` via ``benchmarks.common.write_bench_json``):
 * ``stream/cur/rows/<m>x<n>/fixed|adaptive`` — fixed pre-pass uniform rows
   vs in-stream row admission (equal r budget, identical adaptive columns)
   on spiked-rows matrices, plus a ``row_win`` PASS/FAIL row.
+* ``stream/cur/<m>x<n>/adaptive+tel/w<W>`` — the adaptive config re-timed
+  with the in-scan telemetry frame attached (``telemetry=True``); the
+  ``+tel`` suffix pairs each row with its untelemetered twin so
+  ``check_regression.py --overhead-suffix "+tel"`` can gate the overhead
+  (acceptance: ≤ 1.3×) *within* one artifact, host-invariantly.
+* ``stream/obs/est/<family>/<m>x<n>`` — the a-posteriori error estimator
+  (``repro.obs.estimate_rel_error``) vs the true relative Frobenius error
+  on each stream family; ``ratio`` must sit inside the 2× band.
 * ``stream/spsvd/<m>x<n>/parity/w<W>``       — max |Δ| between DP-sharded
   and single-host SP-SVD accumulators (exactness evidence).
+
+When ``--out-dir`` is given the run's host metrics (stream telemetry
+summaries + profiling spans, via :mod:`repro.obs.metrics`) are dumped as
+``BENCH_stream.metrics.jsonl`` next to the artifact.
 
   PYTHONPATH=src python -m benchmarks.stream_bench [--smoke]
 """
@@ -26,6 +38,7 @@ Rows (→ ``BENCH_stream.json`` via ``benchmarks.common.write_bench_json``):
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +46,7 @@ import numpy as np
 
 from repro.core.svd import sp_svd_init
 from repro.cur import cur_relative_error, select_rows, streaming_cur_finalize, streaming_cur_init
+from repro.obs import MetricsRegistry, default_registry, estimate_rel_error, set_registry
 from repro.stream import (
     adaptive_cur_finalize,
     adaptive_cur_init,
@@ -129,12 +143,19 @@ def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
             key, m, n, ci0, ri, sketch="countsketch", panel=panel))
         adapt_init = jax.jit(lambda key: adaptive_cur_init(
             key, m, n, c, ri, sketch="countsketch", panel=panel, panel_cap=panel_cap))
+        # telemetered twin of the adaptive config: identical policy + shapes,
+        # plus the in-scan diagnostics frame — its rows pair with the plain
+        # adaptive rows via the "+tel" suffix for the overhead gate
+        adapt_tel_init = jax.jit(lambda key: adaptive_cur_init(
+            key, m, n, c, ri, sketch="countsketch", panel=panel,
+            panel_cap=panel_cap, telemetry=True))
 
         def once(method, workers):
             if method == "fixed-uniform":
                 st = fixed_init(jax.random.key(200))
                 return streaming_cur_finalize(_stream(st, A, panel, workers)).U
-            st = adapt_init(jax.random.key(200))
+            init = adapt_tel_init if method == "adaptive+tel" else adapt_init
+            st = init(jax.random.key(200))
             return adaptive_cur_finalize(_stream(st, A, panel, workers)).U
 
         # Cyclic measurement order keeps each w's fixed/adaptive pair and the
@@ -143,11 +164,13 @@ def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
         fns = {
             (method, workers): (lambda method=method, workers=workers: once(method, workers))
             for workers in (4, 1, 2)
-            for method in ("fixed-uniform", "adaptive")
+            for method in ("fixed-uniform", "adaptive", "adaptive+tel")
         }
         # rounds stretch the session across several contention cycles of the
-        # shared container, so every config touches its true floor
-        times = time_calls_interleaved(fns, warmup=1, rounds=6 if quick else 100)
+        # shared container, so every config touches its true floor; the quick
+        # lane still needs enough rounds that the telemetry-overhead gate
+        # (±1.3x on paired rows) sits on converged minima, not first-touch noise
+        times = time_calls_interleaved(fns, warmup=1, rounds=40 if quick else 100)
         for workers in (1, 2, 4):
             for method in ("fixed-uniform", "adaptive"):
                 rel = errs[(method, workers)]
@@ -160,6 +183,12 @@ def run_adaptive_vs_uniform(shapes, trials: int, quick: bool) -> list:
                     "derived": derived,
                     "_rel_err": rel,
                 })
+            overhead = times[("adaptive+tel", workers)] / max(times[("adaptive", workers)], 1e-9)
+            rows.append({
+                "name": f"stream/cur/{m}x{n}/adaptive+tel/w{workers}",
+                "us_per_call": round(times[("adaptive+tel", workers)], 1),
+                "derived": f"telemetry_overhead={overhead:.2f}x;c={c};panel={panel}",
+            })
         for workers in (1, 2, 4):
             win = errs[("fixed-uniform", workers)] / max(errs[("adaptive", workers)], 1e-12)
             rows.append({
@@ -272,6 +301,48 @@ def run_row_admission(shapes, trials: int) -> list:
     return rows
 
 
+def run_error_estimator(shapes, trials: int) -> list:
+    """A-posteriori estimator audit rows: ``estimate_rel_error`` (the
+    single-pass Ψ-vs-ÂΩ estimate) against the true relative Frobenius error
+    on each stream family. Acceptance: ``ratio`` inside the 2× band in both
+    directions. The final telemetry frame of each family is folded into the
+    process metrics registry (→ ``BENCH_stream.metrics.jsonl``) so the
+    per-panel admission/eviction audit ships with the artifact."""
+    rows = []
+    c = r = 16
+    reg = default_registry()
+    for m, n, panel in shapes:
+        for family in ("spiked", "late-spike", "drift"):
+            ests, trues = [], []
+            for t in range(trials):
+                key = jax.random.key(m + n + 17 * t)
+                if family == "spiked":
+                    A, _pos = spiked_decay_matrix(key, m, n)
+                elif family == "late-spike":
+                    A, _e, _l = late_spike_matrix(key, m, n)
+                else:
+                    A, _b = drifting_spectrum_matrix(key, m, n)
+                st = adaptive_cur_init(
+                    jax.random.key(500 + t), m, n, c, None, r=r,
+                    sketch="countsketch", panel=panel, panel_cap=2,
+                    panel_cap_rows=2, swap_gain=2.0, telemetry=True,
+                )
+                st = stream_panels(st, A, panel)
+                ests.append(float(estimate_rel_error(st)))
+                trues.append(float(cur_relative_error(A, adaptive_cur_finalize(st))))
+                if t == 0:
+                    reg.record_stream_telemetry(st, prefix=f"stream/{family}/{m}x{n}")
+            est, true = float(np.mean(ests)), float(np.mean(trues))
+            ratio = est / max(true, 1e-12)
+            rows.append({
+                "name": f"stream/obs/est/{family}/{m}x{n}",
+                "us_per_call": 0.0,
+                "derived": f"est={est:.4f};true={true:.4f};ratio={ratio:.2f}"
+                           f"({'PASS' if 0.5 <= ratio <= 2.0 else 'FAIL'}@2x-band)",
+            })
+    return rows
+
+
 def run_spsvd_parity(shapes) -> list:
     """SP-SVD DP-sharded parity evidence (exactness, not speed)."""
     rows = []
@@ -304,6 +375,7 @@ def run(trials: int = 3, quick: bool = False) -> list:
     rows = run_adaptive_vs_uniform(shapes, trials, quick)
     rows += run_eviction(shapes, trials)
     rows += run_row_admission(shapes, trials)
+    rows += run_error_estimator(shapes, trials)
     rows += run_spsvd_parity(shapes)
     return rows
 
@@ -313,12 +385,23 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true", help="single small shape, 1 trial (CI)")
     ap.add_argument("--out-dir", default=None, help="where to write BENCH_stream.json")
     args = ap.parse_args()
-    rows = run(trials=1 if args.smoke else 3, quick=args.smoke)
-    print("name,us_per_call,derived")
-    for row in rows:
-        print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
-    path = write_bench_json("stream", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
-    print(f"wrote {path}")
+    # enabled registry for the run: captures the engine's profiling spans and
+    # the estimator scenario's telemetry summaries alongside the artifact
+    prev = set_registry(MetricsRegistry())
+    try:
+        rows = run(trials=1 if args.smoke else 3, quick=args.smoke)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']},{str(row['derived']).replace(',', ';')}")
+        path = write_bench_json("stream", rows, meta={"smoke": args.smoke}, out_dir=args.out_dir)
+        print(f"wrote {path}")
+        metrics_path = os.path.join(
+            os.path.dirname(path) or os.getcwd(), "BENCH_stream.metrics.jsonl"
+        )
+        default_registry().dump_jsonl(metrics_path)
+        print(f"wrote {metrics_path}")
+    finally:
+        set_registry(prev)
 
 
 if __name__ == "__main__":

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from ..core.gmr import fast_gmr_core
 from ..core.sketching import draw_sketch
+from ..obs.telemetry import fixed_stream_telemetry, init_telemetry
 from ..stream.engine import (
     PanelOps,
     PanelState,
@@ -52,6 +53,7 @@ __all__ = [
     "StreamingCURState",
     "CURStreamCtx",
     "STREAMING_CUR_OPS",
+    "STREAMING_CUR_TEL_OPS",
     "streaming_cur_init",
     "streaming_cur_update",
     "streaming_cur_finalize",
@@ -94,6 +96,12 @@ STREAMING_CUR_OPS = PanelOps(
     r_block=_cur_r_block,
 )
 
+# Telemetered twin — same hooks plus the fixed-index diagnostics fold; one
+# module-level instance so telemetered inits share jit caches.
+STREAMING_CUR_TEL_OPS = dataclasses.replace(
+    STREAMING_CUR_OPS, telemetry=fixed_stream_telemetry
+)
+
 # Streaming state: the generic engine state with ctx = CURStreamCtx
 # (``state.S_C`` etc. resolve through to ctx for back-compat).
 StreamingCURState = PanelState
@@ -115,6 +123,7 @@ def streaming_cur_init(
     dtype=jnp.float32,
     sketches=None,
     panel: Optional[int] = None,
+    telemetry: bool = False,
 ) -> StreamingCURState:
     """Draw column-sliceable core sketches and allocate zero accumulators.
 
@@ -133,6 +142,10 @@ def streaming_cur_init(
         panel: fixed streaming width — pre-pads ``R``/``S_R`` to a whole
             number of panels so ragged tails can be zero-padded (exact; see
             :mod:`repro.stream.engine`).
+        telemetry: attach an in-scan diagnostics frame
+            (:class:`repro.obs.telemetry.TelemetryFrame`) + the a-posteriori
+            error estimator's test sketch (:func:`repro.obs.estimate_rel_error`).
+            Requires ``panel=``; factors are bit-identical with it on or off.
 
     Returns:
         A fresh :class:`StreamingCURState` with zero (m,c)/(r,n_pad)/(s_c,s_r)
@@ -157,14 +170,27 @@ def streaming_cur_init(
     S_R.cols(0, 1)  # fail fast on non-sliceable families (srht)
     n_pad = padded_n(n, panel) if panel else n
     ctx = CURStreamCtx(col_idx=col_idx, row_idx=row_idx, S_C=S_C, S_R=S_R.pad_cols(n_pad))
+    tel = None
+    ops = STREAMING_CUR_OPS
+    if telemetry:
+        if panel is None:
+            raise ValueError(
+                "telemetry=True requires a fixed panel= width (the diagnostics "
+                "frame is indexed by global panel id)"
+            )
+        # Held-out estimator sketch: fold a constant so the draw is disjoint
+        # from the split(key) core-sketch draws but reproducible from one seed.
+        tel = init_telemetry(jax.random.fold_in(key, 7), m, n, panel)
+        ops = STREAMING_CUR_TEL_OPS
     return StreamingCURState(
         C=jnp.zeros((m, c), dtype),
         R=jnp.zeros((r, n_pad), dtype),
         M=jnp.zeros((s_c, s_r), dtype),
         offset=jnp.zeros((), jnp.int32),
         ctx=ctx,
-        ops=STREAMING_CUR_OPS,
+        ops=ops,
         n=n,
+        tel=tel,
     )
 
 

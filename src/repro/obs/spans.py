@@ -1,0 +1,85 @@
+"""Named profiling spans: wall-clock records + ``jax.profiler`` annotations.
+
+:func:`span` is a context manager instrumenting the host side of a dispatch:
+it pushes a :class:`~repro.obs.metrics.SpanRecord` (start, duration, nesting
+depth) into the active :class:`~repro.obs.metrics.MetricsRegistry` and wraps
+the body in a :class:`jax.profiler.TraceAnnotation`, so the same names show
+up in TensorBoard/perfetto traces when a profiler session is live.
+
+Span naming scheme (see ``docs/observability.md`` for the catalog):
+``layer/subject/stage`` — e.g. ``stream/adaptive_cur/scan``,
+``stream/adaptive_cur/sharded``, ``serve/kv_compress/prefill``,
+``obs/estimate_rel_error``.
+
+Async-dispatch caveat: JAX returns before the device finishes, so a span
+around a bare jitted call measures dispatch, not execution. Block inside the
+span (``jax.block_until_ready(out)``) when device wall-clock is the thing
+being measured — the benchmark drivers do.
+
+With the default registry disabled the context manager is a no-op ``yield``
+(no clock read, no annotation), so spans baked into library code — the
+engine's scan drivers — cost one attribute check in production.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+from .metrics import MetricsRegistry, SpanRecord, default_registry
+
+__all__ = ["span", "render_timeline"]
+
+
+@contextmanager
+def span(name: str, registry: Optional[MetricsRegistry] = None):
+    """Record a named wall-clock span into ``registry`` (default: the
+    process registry) and annotate the profiler trace. No-op when the
+    registry is disabled."""
+    reg = registry if registry is not None else default_registry()
+    if not reg.enabled:
+        yield
+        return
+    depth = len(reg._span_stack)
+    reg._span_stack.append(name)
+    start = time.perf_counter()
+    try:
+        with jax.profiler.TraceAnnotation(name):
+            yield
+    finally:
+        duration = time.perf_counter() - start
+        reg._span_stack.pop()
+        reg.spans.append(
+            SpanRecord(name=name, start=start - reg.epoch, duration=duration, depth=depth)
+        )
+
+
+def render_timeline(registry: Optional[MetricsRegistry] = None, width: int = 40) -> str:
+    """ASCII timeline of the registry's recorded spans.
+
+    One line per span in start order — indentation shows nesting, the bar
+    shows the span's extent relative to the whole recorded window::
+
+        stream/adaptive_cur/scan      12.31ms |   ####             |
+          obs/estimate_rel_error       3.02ms |       ##           |
+
+    Returns ``"(no spans recorded)"`` when the registry has none.
+    """
+    reg = registry if registry is not None else default_registry()
+    spans = sorted(reg.spans, key=lambda s: s.start)
+    if not spans:
+        return "(no spans recorded)"
+    t0 = min(s.start for s in spans)
+    t1 = max(s.start + s.duration for s in spans)
+    window = max(t1 - t0, 1e-9)
+    lines = []
+    for s in spans:
+        lo = int((s.start - t0) / window * width)
+        hi = max(int((s.start + s.duration - t0) / window * width), lo + 1)
+        bar = " " * lo + "#" * (hi - lo) + " " * (width - hi)
+        label = "  " * s.depth + s.name
+        lines.append(f"{label:<44} {s.duration * 1e3:>9.2f}ms |{bar}|")
+    return "\n".join(lines)

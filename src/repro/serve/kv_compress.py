@@ -18,12 +18,15 @@ long-context KV memory wall (beyond-paper integration; see DESIGN.md §4.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.svd import sp_svd_finalize, sp_svd_init, sp_svd_update
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.spans import span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,23 +66,49 @@ def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV
     state = sp_svd_init(key, d, S, sizes=sizes, dtype=jnp.float32, osnap_p=4)
     panel = min(kc.panel, S)
     n_full = S // panel
-    for i in range(n_full):
-        state = sp_svd_update(state, hist[i * panel : (i + 1) * panel].T.astype(jnp.float32))
-    if S % panel:
-        state = sp_svd_update(state, hist[n_full * panel :].T.astype(jnp.float32))
-    U, sig, V = sp_svd_finalize(state, k=kc.rank)  # A=histᵀ: U (d,r), V (S,r)
+    with span("serve/kv_compress/prefill"):
+        for i in range(n_full):
+            state = sp_svd_update(state, hist[i * panel : (i + 1) * panel].T.astype(jnp.float32))
+        if S % panel:
+            state = sp_svd_update(state, hist[n_full * panel :].T.astype(jnp.float32))
+    with span("serve/kv_compress/finalize"):
+        U, sig, V = sp_svd_finalize(state, k=kc.rank)  # A=histᵀ: U (d,r), V (S,r)
     return LowRankKV(v_s=V, sigma=sig, u=U)
 
 
-def compress_head_batch(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
-    """hist: (B, KV, S, d) → vmapped factors (B, KV, ...)."""
+def compress_head_batch(
+    key,
+    hist: jax.Array,
+    kc: KVCompressionConfig,
+    *,
+    registry: Optional[MetricsRegistry] = None,
+) -> LowRankKV:
+    """hist: (B, KV, S, d) → vmapped factors (B, KV, ...).
+
+    When the active registry (``registry=`` or the process default) is
+    enabled, per-head compression-quality metrics are recorded *outside*
+    the vmapped compute: a ``serve/kv_rel_err`` histogram (one relative
+    reconstruction error per head — costs one rank-r reconstruction per
+    head, observability only), the ``serve/kv_compression_ratio`` gauge
+    (dense vs factor floats), and a ``serve/kv_heads_compressed`` counter.
+    """
+    reg = registry if registry is not None else default_registry()
     B, KV, S, d = hist.shape
     keys = jax.random.split(key, B * KV).reshape(B, KV)
     fn = lambda k, h: compress_history(k, h, kc)
     inner = jax.vmap(fn, in_axes=(0, 0))
     outer = jax.vmap(inner, in_axes=(0, 0))
-    out = outer(keys, hist)
-    return LowRankKV(v_s=out.v_s, sigma=out.sigma, u=out.u)
+    with span("serve/kv_compress/head_batch", reg):
+        out = outer(keys, hist)
+    fac = LowRankKV(v_s=out.v_s, sigma=out.sigma, u=out.u)
+    if reg.enabled and not isinstance(hist, jax.core.Tracer):
+        errs = jax.vmap(jax.vmap(compression_error))(hist, fac)
+        for e in np.asarray(errs).ravel():
+            reg.observe("serve/kv_rel_err", float(e))
+        reg.inc("serve/kv_heads_compressed", B * KV)
+        r = fac.sigma.shape[-1]
+        reg.set_gauge("serve/kv_compression_ratio", (S * d) / ((S + d + 1) * r))
+    return fac
 
 
 jax.tree_util.register_dataclass(LowRankKV, data_fields=["v_s", "sigma", "u"], meta_fields=[])

@@ -48,6 +48,11 @@ import jax.numpy as jnp
 from ..core.gmr import fast_gmr_core
 from ..core.projections import psd_project
 from ..core.sketching import draw_sketch
+from ..obs.telemetry import (
+    adaptive_stream_telemetry,
+    fixed_stream_telemetry,
+    init_telemetry,
+)
 from ..stream.adaptive import (
     AdaptiveCURCtx,
     _bind_shard,
@@ -70,7 +75,9 @@ from .batch import SPSDResult
 __all__ = [
     "SPSDStreamCtx",
     "STREAMING_SPSD_OPS",
+    "STREAMING_SPSD_TEL_OPS",
     "ADAPTIVE_SPSD_OPS",
+    "ADAPTIVE_SPSD_TEL_OPS",
     "streaming_spsd_init",
     "streaming_spsd_finalize",
     "adaptive_spsd_init",
@@ -131,6 +138,15 @@ ADAPTIVE_SPSD_OPS = PanelOps(
     symmetric=True,
 )
 
+# Telemetered twins — same hooks plus the per-panel diagnostics folds; one
+# module-level instance each so telemetered inits share jit caches.
+STREAMING_SPSD_TEL_OPS = dataclasses.replace(
+    STREAMING_SPSD_OPS, telemetry=fixed_stream_telemetry
+)
+ADAPTIVE_SPSD_TEL_OPS = dataclasses.replace(
+    ADAPTIVE_SPSD_OPS, telemetry=adaptive_stream_telemetry
+)
+
 
 def _draw_pair(key, sketch: str, s: int, n: int, osnap_p: int, dtype):
     k1, k2 = jax.random.split(key)
@@ -161,6 +177,20 @@ def _resolve_sketch_pair(key, n, c, s, sketch, osnap_p, dtype, sketches, panel):
     return S1, S2.pad_cols(n_pad), n_pad
 
 
+def _maybe_telemetry(telemetry: bool, key, n: int, panel, base_ops, tel_ops):
+    """Shared telemetry plumbing for the SPSD inits: allocate the diagnostics
+    frame (``m = n`` — the stream is square) on an estimator key folded off
+    the init key, and swap in the telemetered ops twin."""
+    if not telemetry:
+        return None, base_ops
+    if panel is None:
+        raise ValueError(
+            "telemetry=True requires a fixed panel= width (the diagnostics "
+            "frame is indexed by global panel id)"
+        )
+    return init_telemetry(jax.random.fold_in(key, 7), n, n, panel), tel_ops
+
+
 def streaming_spsd_init(
     key,
     n: int,
@@ -172,6 +202,7 @@ def streaming_spsd_init(
     dtype=jnp.float32,
     sketches: Optional[Tuple] = None,
     panel: Optional[int] = None,
+    telemetry: bool = False,
 ) -> PanelState:
     """Allocate a fixed-index streaming-SPSD state (symmetric engine plug-in).
 
@@ -195,6 +226,12 @@ def streaming_spsd_init(
             batch parity.
         panel: fixed streaming panel width — pre-pads ``S₂`` so ragged
             tails are zero-padded exactly (see :mod:`repro.stream.engine`).
+        telemetry: attach an in-scan diagnostics frame + the a-posteriori
+            error estimator's test sketch (:func:`repro.obs.estimate_rel_error`
+            — call it after the stream is fully consumed; the symmetric
+            ``C X Cᵀ`` acts on all rows, so the mid-stream estimate is
+            biased). Requires ``panel=``; factors are bit-identical with it
+            on or off.
 
     Returns:
         A :class:`~repro.stream.engine.PanelState` wired to
@@ -216,14 +253,17 @@ def streaming_spsd_init(
         key, n, c, s, sketch, osnap_p, dtype, sketches, panel
     )
     ctx = SPSDStreamCtx(col_idx=col_idx, S1=S1, S2=S2)
+    tel, ops = _maybe_telemetry(telemetry, key, n, panel, STREAMING_SPSD_OPS,
+                                STREAMING_SPSD_TEL_OPS)
     return PanelState(
         C=jnp.zeros((n, c), dtype),
         R=jnp.zeros((0, n_pad), dtype),  # tied operand: R = Cᵀ is derived
         M=jnp.zeros((S1.s, S2.s), dtype),
         offset=jnp.zeros((), jnp.int32),
         ctx=ctx,
-        ops=STREAMING_SPSD_OPS,
+        ops=ops,
         n=n,
+        tel=tel,
     )
 
 
@@ -260,6 +300,7 @@ def adaptive_spsd_init(
     dtype=jnp.float32,
     sketches: Optional[Tuple] = None,
     panel: Optional[int] = None,
+    telemetry: bool = False,
 ) -> PanelState:
     """Adaptive streaming SPSD: kernel columns are *admitted in-stream*.
 
@@ -297,14 +338,17 @@ def adaptive_spsd_init(
         n=n,
         evict=swap_gain is not None,
     )
+    tel, ops = _maybe_telemetry(telemetry, key, n, panel, ADAPTIVE_SPSD_OPS,
+                                ADAPTIVE_SPSD_TEL_OPS)
     return PanelState(
         C=jnp.zeros((n, c), dtype),
         R=jnp.zeros((0, n_pad), dtype),  # tied operand: R = Cᵀ is derived
         M=jnp.zeros((S1.s, S2.s), dtype),
         offset=jnp.zeros((), jnp.int32),
         ctx=ctx,
-        ops=ADAPTIVE_SPSD_OPS,
+        ops=ops,
         n=n,
+        tel=tel,
     )
 
 

@@ -95,12 +95,14 @@ import jax.numpy as jnp
 from ..core.gmr import fast_gmr_core
 from ..core.sketching import GaussianSketch, draw_sketch
 from ..kernels.ops import panel_score
+from ..obs.telemetry import adaptive_stream_telemetry, init_telemetry
 from .engine import PanelOps, PanelState, fresh_pytree, padded_n, truncated_R
 
 __all__ = [
     "AdaptiveCURCtx",
     "AdaptiveRowState",
     "ADAPTIVE_CUR_OPS",
+    "ADAPTIVE_CUR_TEL_OPS",
     "adaptive_cur_init",
     "adaptive_cur_finalize",
 ]
@@ -652,6 +654,13 @@ ADAPTIVE_CUR_OPS = PanelOps(
     merge_state=_merge_state,
 )
 
+# Telemetered twin of ADAPTIVE_CUR_OPS — same hooks plus the per-panel
+# diagnostics fold. A module-level instance (not a per-init replace) so every
+# telemetered init shares one ops object and the engine's jit caches stay hot.
+ADAPTIVE_CUR_TEL_OPS = dataclasses.replace(
+    ADAPTIVE_CUR_OPS, telemetry=adaptive_stream_telemetry
+)
+
 
 def adaptive_cur_init(
     key,
@@ -675,6 +684,7 @@ def adaptive_cur_init(
     dtype=jnp.float32,
     sketches=None,
     panel: Optional[int] = None,
+    telemetry: bool = False,
 ) -> PanelState:
     """Allocate an adaptive streaming-CUR state with an empty column budget.
 
@@ -708,6 +718,11 @@ def adaptive_cur_init(
         sketches: optional pre-drawn ``(S_C, S_R)`` pair (shared randomness).
         panel: fixed streaming panel width — pre-pads ``R``/``S_R`` so ragged
             tails can be zero-padded exactly (see :mod:`repro.stream.engine`).
+        telemetry: attach an in-scan diagnostics frame
+            (:class:`repro.obs.telemetry.TelemetryFrame` — admission/eviction
+            counts, score quantiles, and the a-posteriori error estimator's
+            test sketch; see :func:`repro.obs.estimate_rel_error`). Requires
+            ``panel=``; factors are bit-identical with it on or off.
 
     Returns:
         A :class:`~repro.stream.engine.PanelState` wired to
@@ -788,14 +803,28 @@ def adaptive_cur_init(
         n=n,
         evict=swap_gain is not None,
     )
+    tel = None
+    ops = ADAPTIVE_CUR_OPS
+    if telemetry:
+        if panel is None:
+            raise ValueError(
+                "telemetry=True requires a fixed panel= width (the diagnostics "
+                "frame is indexed by global panel id)"
+            )
+        # Independent key for the estimator's held-out test sketch: folding a
+        # constant into the init key keeps it disjoint from the S_C/S_R draws
+        # (which use split(key)) while staying reproducible from one seed.
+        tel = init_telemetry(jax.random.fold_in(key, 7), m, n, panel)
+        ops = ADAPTIVE_CUR_TEL_OPS
     return PanelState(
         C=jnp.zeros((m, c), dtype),
         R=jnp.zeros((r, n_pad), dtype),
         M=jnp.zeros((s_c, s_r), dtype),
         offset=jnp.zeros((), jnp.int32),
         ctx=ctx,
-        ops=ADAPTIVE_CUR_OPS,
+        ops=ops,
         n=n,
+        tel=tel,
     )
 
 

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from ..distributed.sharding import shard_map_compat
+from ..obs.spans import span
 from .engine import PanelState, padded_n, scan_chunk, scan_panels, stream_panels
 
 __all__ = [
@@ -86,6 +87,10 @@ def merge_states(states: Sequence[PanelState]) -> PanelState:
     When the application declares a ``merge_state`` hook (cross-worker
     repairs that touch the accumulators, e.g. adaptive row dedup), it runs
     last — after the accumulator sum and the ctx merge.
+
+    Telemetry frames ride the same algebra: per-panel slots are disjoint
+    worker writes and the rest are running sums, so
+    ``TelemetryFrame.merge`` sums them (the constant test sketch excepted).
     """
     states = list(states)
     base = states[0]
@@ -96,8 +101,11 @@ def merge_states(states: Sequence[PanelState]) -> PanelState:
         ctx = base.ops.merge_ctx([s.ctx for s in states])
     else:
         ctx = base.ctx
+    tel = base.tel
+    if tel is not None:
+        tel = tel.merge([s.tel for s in states])
     merged = dataclasses.replace(
-        base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx
+        base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx, tel=tel
     )
     if base.ops.merge_state is not None:
         merged = base.ops.merge_state(merged)
@@ -212,7 +220,8 @@ def simulate_sharded_stream(
         ctx0 = state0.ops.prep_shard(ctx0, num_workers)
     state0 = dataclasses.replace(state0, ctx=ctx0)
     if jit in ("scan", True):
-        return _fused_simulate(state0, A, tuple(ranges), panel)
+        with span(f"stream/{state0.ops.name}/sharded_simulate"):
+            return _fused_simulate(state0, A, tuple(ranges), panel)
     shards = []
     for w, (lo, hi) in enumerate(ranges):
         ctx = ctx0
@@ -287,6 +296,8 @@ def mesh_sharded_stream(
             M=jax.lax.psum(st.M, axis),
             offset=jnp.asarray(n, jnp.int32),
             ctx=ctx,
+            # telemetry reduces with the same disjoint-write algebra as C/R/M
+            tel=st.tel.collective(axis) if st.tel is not None else None,
         )
         return ops.merge_state(st) if ops.merge_state is not None else st
 
@@ -299,4 +310,5 @@ def mesh_sharded_stream(
         out_specs=out_specs,
         check_vma=False,
     )
-    return f(state0, A)
+    with span(f"stream/{ops.name}/sharded_mesh"):
+        return f(state0, A)

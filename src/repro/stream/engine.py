@@ -59,6 +59,9 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from ..obs.spans import span
+from ..obs.telemetry import fold_psi_chunk
+
 __all__ = [
     "PanelOps",
     "PanelState",
@@ -148,6 +151,14 @@ class PanelOps:
     # jit-traceable and deterministic (the mesh path evaluates it replicated
     # on every shard).
     merge_state: Optional[Callable] = None
+    # Optional in-scan telemetry hook (repro.obs.telemetry):
+    # (tel, ctx_pre, ctx_post, A_L, sc_a, scores, off) -> tel'. Runs AFTER
+    # the C/R/M updates of a panel, only when the state actually carries a
+    # telemetry frame (state.tel is not None), and may only derive
+    # diagnostics — factors are bit-identical with telemetry on or off, and
+    # an untelemetered state (tel=None contributes no pytree leaves)
+    # compiles to the identical scan program.
+    telemetry: Optional[Callable] = None
     # Tied-operand (symmetric) stream: the row factor is R = Cᵀ by
     # definition (SPSD / kernel matrices), so the engine skips the R half of
     # every panel update and `truncated_R` derives R from C. Symmetric ops
@@ -180,6 +191,11 @@ class PanelState:
     ``R`` is allocated at the padded width ``ceil(n/panel)·panel`` when a
     fixed panel width is declared at init; ``n`` records the true column
     count so finalizers can truncate.
+
+    ``tel`` is the optional in-scan diagnostics frame
+    (:class:`repro.obs.telemetry.TelemetryFrame`): ``None`` — the default —
+    contributes no pytree leaves, so untelemetered states keep their
+    pre-telemetry treedef, jit cache keys and donation layout.
     """
 
     C: jax.Array  # (m, c)
@@ -189,6 +205,7 @@ class PanelState:
     ctx: Any  # application pytree (sketches, indices, adaptive state)
     ops: PanelOps  # static
     n: int  # static: true column count
+    tel: Any = None  # optional in-scan telemetry frame (repro.obs)
 
     def __getattr__(self, name):
         # Back-compat with the pre-engine SPSVDState / StreamingCURState
@@ -208,7 +225,9 @@ class PanelState:
 
 
 jax.tree_util.register_dataclass(
-    PanelState, data_fields=["C", "R", "M", "offset", "ctx"], meta_fields=["ops", "n"]
+    PanelState,
+    data_fields=["C", "R", "M", "offset", "ctx", "tel"],
+    meta_fields=["ops", "n"],
 )
 
 
@@ -259,7 +278,13 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
         r_blk = ops.r_block(ctx, A_L, off).astype(state.R.dtype)
         R = jax.lax.dynamic_update_slice_in_dim(state.R, r_blk, off, axis=1)
 
-    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L, ctx=ctx)
+    # Telemetry fold runs last — it observes the panel's outcome (pre/post
+    # ctx) and only writes the diagnostics frame, never the factors.
+    tel = state.tel
+    if ops.telemetry is not None and tel is not None:
+        tel = ops.telemetry(tel, state.ctx, ctx, A_L, sc_a, scores, off)
+
+    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L, ctx=ctx, tel=tel)
 
 
 # Module-scope jit: one trace per (shapes, ops) pair for the whole process —
@@ -283,6 +308,14 @@ def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
     array (no chunk copy).
     """
     num_panels = A_chunk.shape[1] // panel
+    if state.ops.telemetry is not None and state.tel is not None:
+        # estimator Ψ fold hoisted out of the scan body: one GEMM over the
+        # whole chunk (inside the carry it costs ~3× standalone wall-time);
+        # the chunk is consumed atomically by this program, so Ψ and the
+        # factors agree at every program boundary
+        state = dataclasses.replace(
+            state, tel=fold_psi_chunk(state.tel, A_chunk, state.offset)
+        )
 
     def body(st, t):
         A_L = jax.lax.dynamic_slice_in_dim(A_chunk, t * panel, panel, axis=1)
@@ -303,6 +336,15 @@ def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) ->
     tails go through the zero-padded :func:`scan_chunk` path instead.
     """
     offs = state.offset + jnp.arange(num_panels, dtype=jnp.int32) * panel
+    if state.ops.telemetry is not None and state.tel is not None:
+        # chunk-level Ψ fold (see scan_chunk); the dynamic window slice
+        # fuses into the GEMM — no chunk copy is materialized
+        block = jax.lax.dynamic_slice_in_dim(
+            A, state.offset, num_panels * panel, axis=1
+        )
+        state = dataclasses.replace(
+            state, tel=fold_psi_chunk(state.tel, block, state.offset)
+        )
 
     def body(st, off):
         A_L = jax.lax.dynamic_slice_in_dim(A, off, panel, axis=1)
@@ -363,19 +405,27 @@ def stream_panels(
     if jit in ("scan", True):
         width = stop - start
         num_panels = padded_n(width, panel) // panel
-        if width == num_panels * panel:
-            # aligned: slice panels straight out of the shared A — no copy
-            return _scan_stream_panels(state, A, num_panels=num_panels, panel=panel)
-        chunk = A[:, start:stop]
-        chunk = jnp.pad(chunk, ((0, 0), (0, num_panels * panel - width)))
-        return _scan_stream_chunk(state, chunk, panel=panel)
+        with span(f"stream/{state.ops.name}/scan"):
+            if width == num_panels * panel:
+                # aligned: slice panels straight out of the shared A — no copy
+                return _scan_stream_panels(state, A, num_panels=num_panels, panel=panel)
+            chunk = A[:, start:stop]
+            chunk = jnp.pad(chunk, ((0, 0), (0, num_panels * panel - width)))
+            return _scan_stream_chunk(state, chunk, panel=panel)
     step = jitted_panel_update if jit == "per-panel" else panel_update
-    for off in range(start, stop, panel):
-        width = min(panel, stop - off)
-        A_L = jax.lax.dynamic_slice_in_dim(A, off, width, axis=1)
-        if width != panel:
-            A_L = jnp.pad(A_L, ((0, 0), (0, panel - width)))
-        state = step(state, A_L)
+    with span(f"stream/{state.ops.name}/per-panel"):
+        if state.ops.telemetry is not None and state.tel is not None:
+            # parity with the scan path: Ψ folds once over the consumed
+            # window, not per panel (same sum up to float association)
+            state = dataclasses.replace(
+                state, tel=fold_psi_chunk(state.tel, A[:, start:stop], start)
+            )
+        for off in range(start, stop, panel):
+            width = min(panel, stop - off)
+            A_L = jax.lax.dynamic_slice_in_dim(A, off, width, axis=1)
+            if width != panel:
+                A_L = jnp.pad(A_L, ((0, 0), (0, panel - width)))
+            state = step(state, A_L)
     return state
 
 

@@ -128,12 +128,28 @@ def compressed_mean_grads(
     key,
     ccfg: CompressionConfig,
     axes: Tuple[str, ...],
+    *,
+    with_stats: bool = False,
 ):
     """Inside shard_map(manual over ``axes``): replace the dense DP psum.
 
     grads: local gradient pytree. err: local EF residual pytree (zeros tree
     when EF disabled). Returns (global mean-ish grads, new err).
     Small leaves take the dense psum path unchanged.
+
+    ``with_stats=True`` additionally returns a dict of *traced* per-step
+    compression-quality scalars (this runs inside shard_map — no host
+    metrics registry here; the train step psums them into its metrics, and
+    the host loop can then forward them to :mod:`repro.obs.metrics`):
+
+    * ``comp/wire_floats`` / ``comp/dense_floats`` — floats actually
+      all-reduced vs the dense-gradient volume (static per config);
+    * ``comp/ratio`` — their quotient, the realized compression ratio;
+    * ``comp/ef_norm`` — this worker's error-feedback residual norm
+      ``√Σ‖e‖²`` over compressible leaves (EF health: should stay O(‖g‖),
+      not grow step over step);
+    * ``comp/rel_err`` — this worker's relative reconstruction error
+      ``‖(g+e) − ĝ‖ / ‖g+e‖`` over compressible leaves.
     """
     nworkers = 1
     for a in axes:
@@ -142,7 +158,10 @@ def compressed_mean_grads(
     flat, tdef = jax.tree.flatten(grads)
     flat_err = tdef.flatten_up_to(err)
     out, out_err = [], []
+    wire = dense = 0  # static float counts (python ints — config-determined)
+    ef_sq = local_sq = resid_sq = jnp.zeros((), jnp.float32)
     for i, (g, e) in enumerate(zip(flat, flat_err)):
+        dense += int(np.prod(g.shape))
         if is_compressible(g, ccfg):
             k = jax.random.fold_in(key, i)
             local = g.astype(jnp.float32) + (e if ccfg.error_feedback else 0.0)
@@ -152,10 +171,27 @@ def compressed_mean_grads(
             new_e = (local - ghat) if ccfg.error_feedback else jnp.zeros_like(local)
             out.append(ghat.astype(g.dtype))
             out_err.append(new_e)
+            if with_stats:
+                wire += sum(int(np.prod(t.shape)) for t in triple)
+                ef_sq = ef_sq + jnp.sum(new_e * new_e)
+                local_sq = local_sq + jnp.sum(local * local)
+                resid_sq = resid_sq + jnp.sum((local - ghat) ** 2)
         else:
             out.append(jax.lax.psum(g, axes) / nworkers)
             out_err.append(jnp.zeros_like(e))
-    return jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, out_err)
+            wire += int(np.prod(g.shape))
+    result = jax.tree.unflatten(tdef, out), jax.tree.unflatten(tdef, out_err)
+    if not with_stats:
+        return result
+    stats = {
+        "comp/wire_floats": jnp.asarray(wire, jnp.float32),
+        "comp/dense_floats": jnp.asarray(dense, jnp.float32),
+        "comp/ratio": jnp.asarray(dense / max(wire, 1), jnp.float32),
+        "comp/ef_norm": jnp.sqrt(ef_sq),
+        "comp/rel_err": jnp.sqrt(resid_sq)
+        / jnp.maximum(jnp.sqrt(local_sq), jnp.finfo(jnp.float32).tiny),
+    }
+    return (*result, stats)
 
 
 def init_error_state(params, ccfg: CompressionConfig, nworkers: int):

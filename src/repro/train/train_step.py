@@ -152,7 +152,9 @@ def make_compressed_train_step(
             err_local,
             grads,
         )
-        gbar, new_err = compressed_mean_grads(grads, err_local, key, ccfg, dp)
+        gbar, new_err, cstats = compressed_mean_grads(
+            grads, err_local, key, ccfg, dp, with_stats=True
+        )
         new_err = jax.tree.map(
             lambda e, g: (e if is_compressible(g, ccfg) else jnp.zeros((1,), jnp.float32))[None],
             new_err,
@@ -164,8 +166,10 @@ def make_compressed_train_step(
             nw *= axis_size_compat(a)
         # psum local metrics so every output except `err` is dp-invariant
         # (check_vma=True verifies this; partial-manual + check_vma=False is
-        # broken in jax 0.8.2 — see DESIGN.md §Environment)
-        metrics = {k: jax.lax.psum(v, dp) / nw for k, v in metrics.items()}
+        # broken in jax 0.8.2 — see DESIGN.md §Environment). The per-step
+        # compression-quality stats ride along: worker-varying ones (EF norm,
+        # reconstruction error) become DP means, config-static ones stay put.
+        metrics = {k: jax.lax.psum(v, dp) / nw for k, v in {**metrics, **cstats}.items()}
         metrics = {"loss": jax.lax.psum(loss, dp) / nw, **metrics, **opt_metrics}
         return params, opt, new_err, metrics
 
@@ -180,11 +184,16 @@ def make_compressed_train_step(
         bspec = {k: P(dp, *([None] * (v.ndim - 1))) for k, v in batch.items()}
         mspec = P()
 
+        metric_keys = (
+            "loss", "ce", "aux", "grad_norm", "lr",
+            "comp/wire_floats", "comp/dense_floats", "comp/ratio",
+            "comp/ef_norm", "comp/rel_err",
+        )
         fn = shard_map_compat(
             inner,
             mesh=mesh,
             in_specs=(pspec, ospec, espec, bspec, P()),
-            out_specs=(pspec, ospec, espec, {"loss": mspec, "ce": mspec, "aux": mspec, "grad_norm": mspec, "lr": mspec}),
+            out_specs=(pspec, ospec, espec, {k: mspec for k in metric_keys}),
             axis_names=set(dp),
             check_vma=True,
         )

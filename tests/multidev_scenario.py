@@ -239,6 +239,72 @@ def scenario_stream_sharded_equals_single():
     print("OK scenario_stream_sharded_equals_single")
 
 
+def scenario_telemetry_mesh_merge():
+    """Telemetry frames psum-merged under real shard_map (2 and 4 devices)
+    equal the single-host frame: integer diagnostics bitwise, float running
+    sums to fp32 summation order, and Ψ = A·Ω_test stays exact. Factors are
+    bit-identical with telemetry on or off on the mesh path too."""
+    from jax.sharding import Mesh
+
+    from repro.cur.streaming import streaming_cur_init
+    from repro.data.synthetic import spiked_decay_matrix
+    from repro.stream import adaptive_cur_init, mesh_sharded_stream, stream_panels
+
+    m, n, panel = 200, 256, 32
+    A, _pos = spiked_decay_matrix(jax.random.key(30), m, n)
+    ci = jnp.asarray([3, 50, 99, 120, 200, 7, 31, 88], jnp.int32)
+    ri = jnp.asarray([5, 17, 40, 77, 90, 120, 150, 199], jnp.int32)
+
+    def finit(telemetry=True):
+        return streaming_cur_init(
+            jax.random.key(31), m, n, ci, ri, sketch="countsketch", panel=panel,
+            telemetry=telemetry,
+        )
+
+    single = stream_panels(finit(), A, panel)
+    int_leaves = ("admitted", "evicted", "rows_admitted", "occupancy", "events", "panels_seen")
+    float_leaves = ("panel_scores", "panel_energy", "energy_mass", "psi")
+    for W in (2, 4):
+        mesh_w = Mesh(np.array(jax.devices()[:W]), ("data",))
+        shard = mesh_sharded_stream(finit(), A, panel, mesh_w)
+        for leaf in int_leaves:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(shard.tel, leaf)),
+                np.asarray(getattr(single.tel, leaf)),
+                err_msg=f"W={W} {leaf}",
+            )
+        for leaf in float_leaves:
+            np.testing.assert_allclose(
+                np.asarray(getattr(shard.tel, leaf)),
+                np.asarray(getattr(single.tel, leaf)),
+                rtol=1e-4, atol=1e-4, err_msg=f"W={W} {leaf}",
+            )
+        np.testing.assert_allclose(
+            np.asarray(shard.tel.psi), np.asarray(A @ shard.tel.omega[:n]),
+            rtol=1e-4, atol=1e-3,
+        )
+        # telemetry never perturbs the mesh-path factors
+        plain = mesh_sharded_stream(finit(telemetry=False), A, panel, mesh_w)
+        np.testing.assert_array_equal(np.asarray(plain.C), np.asarray(shard.C))
+        np.testing.assert_array_equal(np.asarray(plain.M), np.asarray(shard.M))
+
+    # adaptive policy: per-worker slot ranges — merged admission totals must
+    # account for every filled slot, and the audit summary stays consistent
+    from repro.obs import telemetry_summary
+
+    for W in (2, 4):
+        mesh_w = Mesh(np.array(jax.devices()[:W]), ("data",))
+        st = adaptive_cur_init(
+            jax.random.key(32), m, n, 8, ri, sketch="countsketch", panel=panel,
+            panel_cap=2, swap_gain=2.0, telemetry=True,
+        )
+        st = mesh_sharded_stream(st, A, panel, mesh_w)
+        s = telemetry_summary(st)
+        assert s["total_admitted"] == int(st.ctx.n_filled), (W, s["total_admitted"])
+        assert s["panels_seen"] == n // panel, (W, s["panels_seen"])
+    print("OK scenario_telemetry_mesh_merge")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {
@@ -246,6 +312,7 @@ if __name__ == "__main__":
         "compressed": scenario_compressed_step_converges,
         "wire": scenario_compressed_reduces_wire_bytes,
         "stream": scenario_stream_sharded_equals_single,
+        "telemetry": scenario_telemetry_mesh_merge,
     }
     if which == "all":
         for fn in fns.values():

@@ -3,8 +3,8 @@
 Two checks:
 
 1. **Docstring audit** — every *public* API in the audited packages
-   (``repro.stream``, ``repro.cur``, ``repro.spsd``) must carry a
-   docstring: module-level
+   (``repro.stream``, ``repro.cur``, ``repro.spsd``, ``repro.obs``) must
+   carry a docstring: module-level
    functions and classes, public methods/properties of public classes, and
    the modules themselves. Public = not ``_``-prefixed and defined inside
    the audited package (re-exports are attributed to their home module).
@@ -30,7 +30,7 @@ import pkgutil
 import re
 import sys
 
-AUDITED_PACKAGES = ["repro.stream", "repro.cur", "repro.spsd"]
+AUDITED_PACKAGES = ["repro.stream", "repro.cur", "repro.spsd", "repro.obs"]
 
 PAPER_MAP = os.path.join(os.path.dirname(__file__), "..", "docs", "paper_map.md")
 
