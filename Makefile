@@ -8,7 +8,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
 
-docs-check:  ## docstring audit (repro.stream/cur/spsd/obs) + docs/paper_map.md anchors
+docs-check:  ## docstring audit (repro.stream/cur/spsd/obs/serve) + docs/paper_map.md anchors
 	$(PY) tools/check_docstrings.py
 
 test-slow:  ## heavy sweeps + multi-device subprocess scenarios
@@ -21,12 +21,15 @@ smoke:  ## quick benchmark artifacts (CI)
 	$(PY) -m benchmarks.cur_decomp --smoke
 	$(PY) -m benchmarks.stream_bench --smoke
 	$(PY) -m benchmarks.spsd_approx --smoke
+	$(PY) -m benchmarks.serve_bench --smoke
 
 perf-check:  ## regenerate the smoke benches and gate vs benchmarks/baselines/
 	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/perf-check
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_stream.json
 	$(PY) -m benchmarks.spsd_approx --smoke --out-dir /tmp/perf-check
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_spsd.json
+	$(PY) -m benchmarks.serve_bench --smoke --out-dir /tmp/perf-check
+	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_serve.json
 
 obs-check:  ## telemetry acceptance: <=1.3x paired-row overhead + HLO/bitwise identity
 	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/obs-check

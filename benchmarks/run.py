@@ -22,6 +22,7 @@ def main() -> None:
         cur_decomp,
         gmr_error,
         roofline,
+        serve_bench,
         single_pass_svd,
         sketch_perf,
         spsd_approx,
@@ -36,6 +37,7 @@ def main() -> None:
         "sketch_perf": sketch_perf,    # kernel layer
         "roofline": roofline,          # §Roofline terms from dry-run artifacts
         "stream_bench": stream_bench,  # streaming engine: adaptive/evict/rows + DP parity
+        "serve_bench": serve_bench,    # serving: decode throughput + KV compression
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -19,10 +19,13 @@ from repro.launch import serve as serve_mod
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--kv-compress", type=int, default=8, metavar="RANK",
+                    help="KV compression rank for full-attention layers (0 = dense)")
     args = ap.parse_args()
     serve_mod.main([
         "--arch", args.arch, "--smoke",
         "--batch", "4", "--prompt-len", "48", "--gen", "24", "--mesh", "4x2",
+        "--kv-compress", str(args.kv_compress),
     ])
     print("serve_lm example OK")
 

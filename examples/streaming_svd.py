@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import practical_sp_svd, sp_svd_finalize, sp_svd_init, sp_svd_update, svd_error_ratio
+from repro.core import practical_sp_svd, sp_svd_finalize, sp_svd_init, svd_error_ratio
 from repro.serve import KVCompressionConfig, compress_history, compression_error, lowrank_decode_attention, LowRankKV
+from repro.stream import scan_chunk
 
 # ---- 1. stream a matrix we never hold in memory ---------------------------
 m, n, k = 2000, 1600, 10
@@ -29,10 +30,13 @@ def column_panel(off, width):  # the "stream": panels generated on demand
 
 
 sizes = dict(c=40, r=40, c0=120, r0=120, s_c=160, s_r=160)
-state = sp_svd_init(key, m, n, sizes=sizes)
-panel = 200
-for off in range(0, n, panel):
-    state = sp_svd_update(state, column_panel(off, panel))
+panel, chunk = 200, 400  # each arriving chunk is scan-compiled as 2 panels
+state = sp_svd_init(key, m, n, sizes=sizes, panel=panel)
+# per-chunk arrays need the relative-indexed scan (offset lives in the carry);
+# donating the carry keeps the accumulators in place across chunks
+fold = jax.jit(scan_chunk, static_argnames="panel", donate_argnums=(0,))
+for off in range(0, n, chunk):
+    state = fold(state, column_panel(off, chunk), panel)
 Uo, S, Vo = sp_svd_finalize(state)
 
 A = (U * sv[None]) @ V.T  # materialized ONLY to evaluate

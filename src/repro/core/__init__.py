@@ -39,6 +39,8 @@ from .svd import (
     sp_svd_init,
     sp_svd_sizes,
     sp_svd_update,
+    spsvd_engine_finalize,
+    spsvd_engine_init,
     svd_error_ratio,
 )
 
@@ -88,7 +90,7 @@ __all__ = [
     "psd_project", "sym_project",
     "approx_leverage_scores", "leverage_scores",
     "fast_sp_svd", "practical_sp_svd", "sp_svd_finalize", "sp_svd_init", "sp_svd_sizes",
-    "sp_svd_update", "svd_error_ratio",
+    "sp_svd_update", "spsvd_engine_finalize", "spsvd_engine_init", "svd_error_ratio",
     *_CUR_EXPORTS,
     *_SPSD_EXPORTS,
 ]

@@ -14,7 +14,11 @@ O((m+n)k/ε) footprint of Theorem 4; the input panels are never retained.
 
 The per-panel accumulator mechanics live in the shared
 :mod:`repro.stream.engine` (``PanelState`` + ``SP_SVD_OPS``); this module
-keeps the Algorithm-3 surface as thin wrappers. ``fast_sp_svd`` streams
+keeps the Algorithm-3 surface as thin wrappers. The engine-level
+constructor/finalizer pair (:func:`spsvd_engine_init` /
+:func:`spsvd_engine_finalize`, explicit sketch sizes, jit/vmap-safe) is the
+layer downstream plug-ins — e.g. the serving KV-cache compressor — build
+on; the classic loop names delegate to it. ``fast_sp_svd`` streams
 through the engine's scan-compiled whole-stream path — one ``lax.scan``
 program per (shape, panel) with the carried state's buffers donated, the
 ragged tail zero-padded to the panel width (exact: ``pad_cols`` sketch
@@ -48,6 +52,8 @@ __all__ = [
     "SPSVDState",
     "SP_SVD_OPS",
     "sp_svd_sizes",
+    "spsvd_engine_init",
+    "spsvd_engine_finalize",
     "sp_svd_init",
     "sp_svd_update",
     "sp_svd_finalize",
@@ -116,30 +122,31 @@ SP_SVD_OPS = PanelOps(
 SPSVDState = PanelState
 
 
-def sp_svd_init(
+def spsvd_engine_init(
     key,
     m: int,
     n: int,
     *,
-    k: Optional[int] = None,
-    eps: float = 0.5,
-    sizes: Optional[dict] = None,
+    sizes: dict,
     dtype=jnp.float32,
     osnap_p: int = 2,
     panel: Optional[int] = None,
 ) -> SPSVDState:
-    """Draw sketches and allocate zero accumulators (Algorithm 3 steps 2–4).
+    """Engine-level Algorithm 3 state constructor (explicit ``sizes``).
+
+    Draws the six sketching operators and allocates zero accumulators
+    (Algorithm 3 steps 2–4), returning a :class:`repro.stream.PanelState`
+    ready for ``panel_update``/``scan_panels``/``stream_panels``. This is
+    the constructor serving-side plug-ins build on; :func:`sp_svd_init`
+    layers the paper's k/eps sizing recipe on top.
 
     ``panel`` declares a fixed streaming width: the n-dim sketches and the
     ``R`` accumulator are zero-pad-extended to a whole number of panels so a
     ragged final panel can be zero-padded instead of retraced (the sketches
     themselves are drawn over ``n`` — padding never consumes randomness, so
-    results are identical across panel choices).
+    results are identical across panel choices). vmap-compatible: all draw
+    paths use traced-key-safe jax.random primitives.
     """
-    if sizes is None:
-        if k is None:
-            raise ValueError("pass either `k` (+eps) or explicit `sizes`")
-        sizes = sp_svd_sizes(k, eps)
     c, r, c0, r0, s_c, s_r = (sizes[x] for x in ("c", "r", "c0", "r0", "s_c", "s_r"))
     n_pad = padded_n(n, panel) if panel else n
     keys = jax.random.split(key, 6)
@@ -162,18 +169,44 @@ def sp_svd_init(
     )
 
 
+def sp_svd_init(
+    key,
+    m: int,
+    n: int,
+    *,
+    k: Optional[int] = None,
+    eps: float = 0.5,
+    sizes: Optional[dict] = None,
+    dtype=jnp.float32,
+    osnap_p: int = 2,
+    panel: Optional[int] = None,
+) -> SPSVDState:
+    """Draw sketches and allocate zero accumulators (Algorithm 3 steps 2–4).
+
+    Thin wrapper over :func:`spsvd_engine_init` that resolves the paper's
+    k/eps sizing recipe (:func:`sp_svd_sizes`) when explicit ``sizes`` are
+    not given.
+    """
+    if sizes is None:
+        if k is None:
+            raise ValueError("pass either `k` (+eps) or explicit `sizes`")
+        sizes = sp_svd_sizes(k, eps)
+    return spsvd_engine_init(key, m, n, sizes=sizes, dtype=dtype, osnap_p=osnap_p, panel=panel)
+
+
 def sp_svd_update(state: SPSVDState, A_L: jax.Array) -> SPSVDState:
     """Consume one L-column panel (Algorithm 3 steps 6–8). jit-compatible."""
     return panel_update(state, A_L)
 
 
-def sp_svd_finalize(
+def spsvd_engine_finalize(
     state: SPSVDState, k: Optional[int] = None
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Algorithm 3 steps 10–13: QR bases, sketched core solve, small SVD.
 
     Returns (U, Σ, V) with ``A ≈ U diag(Σ) Vᵀ``; ranks are c/r (not k) unless
-    ``k`` is given, matching §6.3's "without fixed rank" protocol.
+    ``k`` is given, matching §6.3's "without fixed rank" protocol. Pure jax —
+    safe under jit/vmap (the serving head-batch path maps it over heads).
     """
     sk = state.ctx
     R = truncated_R(state)
@@ -192,6 +225,13 @@ def sp_svd_finalize(
     if k is not None:
         U, S, V = U[:, :k], S[:k], V[:, :k]
     return U, S, V
+
+
+def sp_svd_finalize(
+    state: SPSVDState, k: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Legacy Algorithm-3 finalize name — thin shim over :func:`spsvd_engine_finalize`."""
+    return spsvd_engine_finalize(state, k=k)
 
 
 def fast_sp_svd(

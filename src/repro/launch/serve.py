@@ -17,7 +17,7 @@ from repro.configs import get_arch
 from repro.distributed.sharding import ParallelismRules, activation_sharding, param_shardings
 from repro.models import init_params, param_count
 from repro.models.modality import synth_patch_embeddings
-from repro.serve import generate
+from repro.serve import KVCompressionConfig, generate
 
 
 def main(argv=None):
@@ -30,7 +30,19 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default="4x2")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-compress", type=int, default=0, metavar="RANK",
+                    help="compress full-attention KV caches at this rank "
+                         "(decode-native streaming SVD; 0 = dense caches)")
+    ap.add_argument("--kv-adaptive", action="store_true",
+                    help="share the rank budget adaptively across heads")
     args = ap.parse_args(argv)
+
+    kc = None
+    if args.kv_compress:
+        kc = KVCompressionConfig(rank=args.kv_compress, oversample=2, panel=32,
+                                 decode_panel=8, refresh_every=32,
+                                 adaptive=args.kv_adaptive,
+                                 min_rank=max(1, args.kv_compress // 4))
 
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = jax.make_mesh((d, m), ("data", "model"))
@@ -49,11 +61,14 @@ def main(argv=None):
     with mesh, activation_sharding(mesh, rules):
         t0 = time.time()
         out = generate(params, cfg, prompt, args.gen, key=key,
-                       temperature=args.temperature, vision=vision, dense_moe=True)
+                       temperature=args.temperature, vision=vision, dense_moe=True,
+                       kv_compress=kc)
         out.block_until_ready()
     dt = time.time() - t0
     n_tok = args.batch * args.gen
-    print(f"[serve] generated {out.shape} in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+    mode = f"compressed kv @ rank {kc.rank}" + (" adaptive" if kc.adaptive else "") \
+        if kc else "dense kv"
+    print(f"[serve] generated {out.shape} in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile, {mode})")
     print("[serve] sample:", out[0, :16].tolist())
     return out
 

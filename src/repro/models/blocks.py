@@ -117,6 +117,11 @@ def _gqa_decode(params, spec_mixer, cfg, x, cache, length):
     B = x.shape[0]
     positions = jnp.broadcast_to(length[None, None], (B, 1))
     q, k, v = _gqa_qkv(params, x, positions, cfg, _theta_for(spec_mixer, cfg))
+    if not isinstance(cache, dict):
+        # pluggable cache backend (e.g. repro.serve.kv_cache.CompressedKV):
+        # owns its own append + attention under decode_attention's contract
+        o, cache = cache.append_attend(q, k, v, length)
+        return o.reshape(B, 1, -1) @ params["w_o"], cache
     if spec_mixer == ATTN_LOCAL:
         w = cfg.window
         slot = length % w

@@ -128,6 +128,27 @@ class MetricsRegistry:
             self.observe(f"{prefix}/panel_score_p50", float(s["score_q"][t, 2]))
             self.observe(f"{prefix}/panel_energy", float(s["panel_energy"][t]))
 
+    def record_kv_compression(self, errs, *, ratio=None, ranks=None, prefix="serve") -> None:
+        """Fold a head-batch of KV-compression quality metrics into the host
+        registry with **one** device→host transfer per array: ``errs`` (any
+        shape of per-head relative reconstruction errors) feeds the
+        ``{prefix}/kv_rel_err`` histogram and the
+        ``{prefix}/kv_heads_compressed`` counter; optional ``ratio`` (host
+        scalar) sets the ``{prefix}/kv_compression_ratio`` gauge; optional
+        ``ranks`` (adaptive per-head allocations) feed the
+        ``{prefix}/kv_head_rank`` histogram."""
+        if not self.enabled:
+            return
+        e = np.asarray(errs, np.float64).ravel()  # the single transfer
+        for v in e:
+            self.observe(f"{prefix}/kv_rel_err", float(v))
+        self.inc(f"{prefix}/kv_heads_compressed", int(e.size))
+        if ratio is not None:
+            self.set_gauge(f"{prefix}/kv_compression_ratio", float(ratio))
+        if ranks is not None:
+            for r in np.asarray(ranks, np.float64).ravel():
+                self.observe(f"{prefix}/kv_head_rank", float(r))
+
     def to_records(self) -> list:
         """Flatten the registry into dump-ready dicts (one per instrument)."""
         recs = [

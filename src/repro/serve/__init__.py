@@ -1,3 +1,27 @@
-"""Serving substrate: generation loop + streaming-SVD KV compression."""
+"""Serving substrate: generation loop + streaming-SVD KV compression.
+
+Layers: :mod:`~repro.serve.kv_compress` (prefill-time head-batch
+compression as a :mod:`repro.stream` panel-engine plug-in),
+:mod:`~repro.serve.kv_cache` (the decode-native
+:class:`~repro.serve.kv_cache.CompressedKV` cache that keeps folding
+generated tokens into the carried engine state), and
+:mod:`~repro.serve.decode` (the fused single-dispatch-per-token
+generation loop). See ``docs/serving.md``.
+"""
 from .decode import generate, sample_token
-from .kv_compress import KVCompressionConfig, LowRankKV, compress_head_batch, compress_history, compression_error, lowrank_decode_attention
+from .kv_cache import CompressedKV, cache_nbytes, compress_prefill_cache, init_compressed_kv
+from .kv_compress import (
+    KVCompressionConfig,
+    LowRankKV,
+    compress_head_batch,
+    compress_history,
+    compression_error,
+    lowrank_decode_attention,
+)
+
+__all__ = [
+    "CompressedKV", "KVCompressionConfig", "LowRankKV",
+    "cache_nbytes", "compress_head_batch", "compress_history",
+    "compress_prefill_cache", "compression_error", "generate",
+    "init_compressed_kv", "lowrank_decode_attention", "sample_token",
+]

@@ -1,0 +1,355 @@
+"""Decode-native compressed KV cache: the panel engine carried through decode.
+
+:mod:`repro.serve.kv_compress` compresses a *finished* prefix; this module
+keeps the compression **live during generation**. Each converted attention
+layer's cache is a :class:`CompressedKV` — a pytree carrying, per
+(batch, kv-head):
+
+* the streaming Algorithm-3 engine state
+  (:class:`repro.stream.PanelState`, vmapped over ``(B, KV)``) that has
+  consumed every token up to ``eng_len``;
+* the last finalized factors ``H ≈ V_s Σ Uᵀ`` covering ``fac_len`` tokens;
+* a small dense *recent* ring ``(B, refresh_every, KV, hd)`` holding the
+  tokens newer than ``fac_len`` exactly.
+
+Every decoded token is appended to the recent buffer; once
+``decode_panel`` tokens are pending past ``eng_len`` they are folded into
+the engine as one panel (:func:`repro.stream.panel_update`, the same
+single-pass update as prefill), and once ``refresh_every`` tokens have
+accumulated past ``fac_len`` the engine is **refactorized**
+(:func:`repro.core.svd.spsvd_engine_finalize` — QR bases + sketched GMR
+core, the numerically robust incremental maintenance of Tropp et al.'s
+practical single-pass sketching) and the recent buffer is reset.
+Attention is exact over the recent window and rank-``r`` over the
+refactorized prefix, with **one joint softmax** across both score blocks.
+
+Everything is shape-static and ``lax.cond``-gated, so the whole policy
+lives inside the one jitted decode step — one compiled program serves the
+entire batch. Adaptive per-head rank
+(``KVCompressionConfig(adaptive=True)``) re-allocates the shared
+``KV·rank`` budget at every refresh via
+:func:`repro.stream.allocate_shared_budget`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.svd import spsvd_engine_finalize
+from repro.models.config import ATTN, ModelConfig
+from repro.models.transformer import segments
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.spans import span
+from repro.stream.engine import PanelState, panel_update, scan_panels
+
+from .kv_compress import (
+    KVCompressionConfig,
+    LowRankKV,
+    _allocate_ranks,
+    _engine_init,
+    _fac_width,
+)
+
+__all__ = [
+    "CompressedKV",
+    "cache_nbytes",
+    "compress_prefill_cache",
+    "init_compressed_kv",
+]
+
+
+def _head_keys(key, B: int, KV: int):
+    # documented derivation (tests replicate it): one key per (batch, head)
+    return jax.random.split(key, B * KV).reshape(B, KV)
+
+
+@dataclasses.dataclass
+class CompressedKV:
+    """Per-layer compressed KV cache state (pytree; ``kc`` is static meta).
+
+    Invariants: ``fac_len <= eng_len <= length``; tokens ``[0, fac_len)``
+    are represented by ``k_fac``/``v_fac``; tokens ``[fac_len, length)``
+    sit densely in ``recent_*`` at slot ``pos - fac_len``; tokens
+    ``[0, eng_len)`` have been folded into ``k_eng``/``v_eng``;
+    ``eng_len - fac_len`` is always a multiple of ``decode_panel`` and
+    strictly less than ``refresh_every``.
+    """
+
+    k_eng: PanelState  # engine states vmapped over (B, KV)
+    v_eng: PanelState
+    k_fac: LowRankKV  # v_s (B,KV,n_max,fw)  sigma (B,KV,fw)  u (B,KV,hd,fw)
+    v_fac: LowRankKV
+    recent_k: jax.Array  # (B, refresh_every, KV, hd) model dtype
+    recent_v: jax.Array
+    fac_len: jax.Array  # () int32 — tokens covered by the factors
+    eng_len: jax.Array  # () int32 — tokens folded into the engine
+    kc: KVCompressionConfig
+
+    def append_attend(self, q, k, v, length):
+        """Append one decoded token and attend against the full history.
+
+        ``q``: (B, 1, H, hd) RoPE'd queries; ``k``/``v``: (B, 1, KV, hd)
+        the new token's projections; ``length``: tokens already cached.
+        Returns ``(o, cache)`` with ``o`` (B, 1, H, hd) — the drop-in
+        contract of :func:`repro.models.attention.decode_attention` plus
+        the updated cache. Traced end-to-end: the fold/refresh policy is
+        ``lax.cond``-gated so this inlines into the jitted decode step.
+        """
+        kc = self.kc
+        slot = length - self.fac_len
+        rk = jax.lax.dynamic_update_slice(
+            self.recent_k, k.astype(self.recent_k.dtype), (0, slot, 0, 0)
+        )
+        rv = jax.lax.dynamic_update_slice(
+            self.recent_v, v.astype(self.recent_v.dtype), (0, slot, 0, 0)
+        )
+        cache = dataclasses.replace(self, recent_k=rk, recent_v=rv)
+        new_len = length + 1
+        cache = jax.lax.cond(
+            new_len - cache.eng_len == kc.decode_panel,
+            partial(_fold_panel, new_len=new_len),
+            lambda c: c,
+            cache,
+        )
+        return _attend(cache, q, new_len), cache
+
+
+jax.tree_util.register_dataclass(
+    CompressedKV,
+    data_fields=[
+        "k_eng", "v_eng", "k_fac", "v_fac",
+        "recent_k", "recent_v", "fac_len", "eng_len",
+    ],
+    meta_fields=["kc"],
+)
+
+
+def _fold_panel(cache: CompressedKV, *, new_len) -> CompressedKV:
+    # fold the decode_panel pending tokens [eng_len, new_len) into the
+    # engine — one panel_update per head, vmapped over (B, KV); then
+    # refactorize if refresh_every tokens have accumulated past the factors
+    kc = cache.kc
+    dp = kc.decode_panel
+    B, W, KV, hd = cache.recent_k.shape
+    start = cache.eng_len - cache.fac_len
+    win_k = jax.lax.dynamic_slice(cache.recent_k, (0, start, 0, 0), (B, dp, KV, hd))
+    win_v = jax.lax.dynamic_slice(cache.recent_v, (0, start, 0, 0), (B, dp, KV, hd))
+    fold = jax.vmap(jax.vmap(panel_update))
+    k_eng = fold(cache.k_eng, win_k.transpose(0, 2, 3, 1).astype(jnp.float32))
+    v_eng = fold(cache.v_eng, win_v.transpose(0, 2, 3, 1).astype(jnp.float32))
+    cache = dataclasses.replace(
+        cache, k_eng=k_eng, v_eng=v_eng, eng_len=cache.eng_len + dp
+    )
+    return jax.lax.cond(
+        cache.eng_len - cache.fac_len == kc.refresh_every,
+        _refresh,
+        lambda c: c,
+        cache,
+    )
+
+
+def _finalize_heads(eng: PanelState, kc: KVCompressionConfig, fw: int) -> LowRankKV:
+    # (B, KV)-vmapped Algorithm-3 finalize at the stored factor width; rows
+    # of V past eng_len are exactly zero (Householder QR of zero rows) and
+    # masked by fac_len regardless
+    U, sig, V = jax.vmap(jax.vmap(lambda st: spsvd_engine_finalize(st, k=fw)))(eng)
+    fac = LowRankKV(v_s=V, sigma=sig, u=U)
+    if kc.adaptive:
+        sigma, _ = _allocate_ranks(fac.sigma, kc)
+        fac = LowRankKV(v_s=fac.v_s, sigma=sigma, u=fac.u)
+    return fac
+
+
+def _refresh(cache: CompressedKV) -> CompressedKV:
+    # refactorize: new factors now cover everything the engine has seen;
+    # the recent window restarts empty at the new fac_len
+    kc = cache.kc
+    fw = cache.k_fac.sigma.shape[-1]
+    return dataclasses.replace(
+        cache,
+        k_fac=_finalize_heads(cache.k_eng, kc, fw),
+        v_fac=_finalize_heads(cache.v_eng, kc, fw),
+        recent_k=jnp.zeros_like(cache.recent_k),
+        recent_v=jnp.zeros_like(cache.recent_v),
+        fac_len=cache.eng_len,
+    )
+
+
+def _attend(cache: CompressedKV, q, new_len):
+    # joint softmax over the rank-r factor scores (prefix, pos < fac_len)
+    # and the exact recent scores (pos in [fac_len, new_len)); fp32 like
+    # decode_attention, cast back to the query dtype
+    B, _, H, hd = q.shape
+    W = cache.recent_k.shape[1]
+    KV = cache.recent_k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+
+    kf, vf = cache.k_fac, cache.v_fac
+    uq = jnp.einsum("bkdr,bkgd->bkgr", kf.u, qg) * kf.sigma[:, :, None, :]
+    s_fac = jnp.einsum("bksr,bkgr->bkgs", kf.v_s, uq) * scale  # (B,KV,G,n_max)
+    n_max = s_fac.shape[-1]
+    s_fac = jnp.where(jnp.arange(n_max)[None, None, None] < cache.fac_len, s_fac, -1e30)
+
+    rk = cache.recent_k.astype(jnp.float32)
+    s_rec = jnp.einsum("bkgd,bwkd->bkgw", qg, rk) * scale  # (B,KV,G,W)
+    n_rec = new_len - cache.fac_len
+    s_rec = jnp.where(jnp.arange(W)[None, None, None] < n_rec, s_rec, -1e30)
+
+    p = jax.nn.softmax(jnp.concatenate([s_fac, s_rec], axis=-1), axis=-1)
+    p_fac, p_rec = p[..., :n_max], p[..., n_max:]
+
+    pv = jnp.einsum("bkgs,bksr->bkgr", p_fac, vf.v_s) * vf.sigma[:, :, None, :]
+    o = jnp.einsum("bkgr,bkdr->bkgd", pv, vf.u)
+    o = o + jnp.einsum("bkgw,bwkd->bkgd", p_rec, cache.recent_v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def init_compressed_kv(
+    key,
+    kc: KVCompressionConfig,
+    *,
+    batch: int,
+    n_kv_heads: int,
+    head_dim: int,
+    n_max: int,
+    dtype=jnp.float32,
+) -> CompressedKV:
+    """Fresh empty compressed cache for ``n_max`` total tokens.
+
+    Key derivation (parity tests replicate it): the K engines draw from
+    ``fold_in(key, 0)`` and the V engines from ``fold_in(key, 1)``, each
+    split into ``batch·n_kv_heads`` per-head keys row-major over
+    ``(batch, kv_head)``.
+    """
+    fw = _fac_width(head_dim, kc)
+    init_one = lambda k: _engine_init(k, head_dim, n_max, kc)
+    eng = []
+    for half in range(2):  # 0 → K, 1 → V
+        keys = _head_keys(jax.random.fold_in(key, half), batch, n_kv_heads)
+        eng.append(jax.vmap(jax.vmap(init_one))(keys))
+    zero_fac = LowRankKV(
+        v_s=jnp.zeros((batch, n_kv_heads, n_max, fw), jnp.float32),
+        sigma=jnp.zeros((batch, n_kv_heads, fw), jnp.float32),
+        u=jnp.zeros((batch, n_kv_heads, head_dim, fw), jnp.float32),
+    )
+    recent = jnp.zeros((batch, kc.refresh_every, n_kv_heads, head_dim), dtype)
+    return CompressedKV(
+        k_eng=eng[0],
+        v_eng=eng[1],
+        k_fac=zero_fac,
+        v_fac=dataclasses.replace(zero_fac),
+        recent_k=recent,
+        recent_v=recent,
+        fac_len=jnp.zeros((), jnp.int32),
+        eng_len=jnp.zeros((), jnp.int32),
+        kc=kc,
+    )
+
+
+def _convert_core(key, k_dense, v_dense, prompt_len: int, kc: KVCompressionConfig):
+    # dense ATTN cache (B, n_max, KV, hd) ×2 → CompressedKV with the first
+    # prompt_len tokens streamed through the engine and factorized; the
+    # engine's column domain is the full n_max so decode keeps appending
+    B, n_max, KV, hd = k_dense.shape
+    fw = _fac_width(hd, kc)
+    panel = min(kc.panel, prompt_len)
+    n_full = prompt_len // panel
+
+    def one(head_key, hist_T):  # hist_T (hd, n_max), first prompt_len cols valid
+        st = _engine_init(head_key, hd, n_max, kc)
+        if n_full:
+            st = scan_panels(st, hist_T, n_full, panel)
+        if prompt_len % panel:
+            st = panel_update(st, hist_T[:, n_full * panel : prompt_len])
+        U, sig, V = spsvd_engine_finalize(st, k=fw)
+        return st, LowRankKV(v_s=V, sigma=sig, u=U)
+
+    halves = []
+    for half, dense in enumerate((k_dense, v_dense)):
+        keys = _head_keys(jax.random.fold_in(key, half), B, KV)
+        hists = dense.transpose(0, 2, 3, 1).astype(jnp.float32)  # (B,KV,hd,n_max)
+        halves.append(jax.vmap(jax.vmap(one))(keys, hists))
+    (k_eng, k_fac), (v_eng, v_fac) = halves
+    if kc.adaptive:
+        k_fac = LowRankKV(k_fac.v_s, _allocate_ranks(k_fac.sigma, kc)[0], k_fac.u)
+        v_fac = LowRankKV(v_fac.v_s, _allocate_ranks(v_fac.sigma, kc)[0], v_fac.u)
+    recent = jnp.zeros((B, kc.refresh_every, KV, hd), k_dense.dtype)
+    plen = jnp.asarray(prompt_len, jnp.int32)
+    return CompressedKV(
+        k_eng=k_eng, v_eng=v_eng, k_fac=k_fac, v_fac=v_fac,
+        recent_k=recent, recent_v=recent, fac_len=plen, eng_len=plen, kc=kc,
+    )
+
+
+# one compiled conversion program per (shape, prompt_len, kc) — all
+# same-shaped ATTN layers of a model share a single trace
+_convert_one = jax.jit(_convert_core, static_argnames=("prompt_len", "kc"))
+
+
+@partial(jax.jit, static_argnames=("prompt_len", "kc"))
+def _convert_rep(keys, k_dense, v_dense, prompt_len: int, kc: KVCompressionConfig):
+    # scanned-segment variant: all n_repeat layers convert in one program
+    per_rep = lambda kk, kd, vd: _convert_core(kk, kd, vd, prompt_len, kc)
+    return jax.vmap(per_rep)(keys, k_dense, v_dense)
+
+
+def compress_prefill_cache(
+    key,
+    cfg: ModelConfig,
+    cache: dict,
+    kc: KVCompressionConfig,
+    *,
+    registry: Optional[MetricsRegistry] = None,
+) -> dict:
+    """Convert every global-attention (``ATTN``) layer cache in a prefilled
+    decode cache to :class:`CompressedKV`; other mixers (local/ring caches,
+    MLA latents, SSM state — already O(1) or structurally different) pass
+    through untouched.
+
+    Layer ``i`` (flat position over segments × unit, counting every spec)
+    converts with ``fold_in(key, i)``; scanned segments convert all
+    repeats in one vmapped program. Returns a new cache dict sharing the
+    unconverted entries.
+    """
+    reg = registry if registry is not None else default_registry()
+    prompt_len = int(cache["length"])
+    seg_caches = []
+    li = 0
+    n_conv = 0
+    with span("serve/kv_cache/convert", reg):
+        for seg, seg_cache in zip(segments(cfg), cache["segments"]):
+            pos_caches = []
+            for pos, spec in enumerate(seg.unit):
+                c = seg_cache[pos]
+                if spec.mixer == ATTN:
+                    lk = jax.random.fold_in(key, li)
+                    if seg.n_repeat == 1:
+                        c = _convert_one(lk, c["k"], c["v"], prompt_len=prompt_len, kc=kc)
+                        n_conv += 1
+                    else:
+                        reps = jax.random.split(lk, seg.n_repeat)
+                        c = _convert_rep(reps, c["k"], c["v"], prompt_len, kc)
+                        n_conv += seg.n_repeat
+                li += 1
+                pos_caches.append(c)
+            seg_caches.append(tuple(pos_caches))
+    out = {"segments": tuple(seg_caches), "length": cache["length"]}
+    if reg.enabled:
+        reg.inc("serve/kv_layers_converted", n_conv)
+        reg.set_gauge("serve/kv_cache_bytes", cache_nbytes(out))
+    return out
+
+
+def cache_nbytes(cache) -> int:
+    """Total bytes of every array leaf of a cache pytree — honest accounting:
+    for a :class:`CompressedKV` this includes the carried engine state and
+    recent buffers, not just the factors."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache))

@@ -11,29 +11,71 @@ Decode then attends in factor space:
     output  = pᵀ V_hist ≈ ((pᵀ V_s^v) Σ_v) U_vᵀ
 
 Memory: (S+d)·r vs S·d floats per head → d/r× cache compression.
-This is the paper's single-pass-SVD motivation re-targeted at the
-long-context KV memory wall (beyond-paper integration; see DESIGN.md §4.2).
+
+The compressor is a :mod:`repro.stream` plug-in: per-head state is the
+engine's :class:`~repro.stream.PanelState` built by
+:func:`repro.core.svd.spsvd_engine_init`, prefill runs as **one fused
+``lax.scan`` program per head-batch** (the pure panel core is vmapped over
+(batch, kv-head) and jitted once per shape), and the same engine state is
+carried *into decode* by :mod:`repro.serve.kv_cache`, which folds newly
+generated tokens panel-by-panel and periodically refactorizes — the
+paper's single-pass streaming regime applied to the KV memory wall
+(beyond-paper integration; see ``docs/serving.md``).
+
+Per-head **adaptive rank** (``KVCompressionConfig(adaptive=True)``) reuses
+the streaming-CUR budget machinery
+(:func:`repro.stream.allocate_shared_budget`): the shared budget
+``KV·rank`` per request is spent greedily on the heads with the heaviest
+spectra, so a spiked head can keep up to ``max_rank`` directions while a
+flat head falls back to ``min_rank``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.svd import sp_svd_finalize, sp_svd_init, sp_svd_update
+from repro.core.svd import spsvd_engine_finalize, spsvd_engine_init
 from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.obs.spans import span
+from repro.stream.adaptive import allocate_shared_budget
+from repro.stream.engine import panel_update, scan_panels, stream_panels
 
 
 @dataclasses.dataclass(frozen=True)
 class KVCompressionConfig:
+    """Static configuration of the KV compressor (hashable → jit-static).
+
+    ``rank``/``oversample``/``panel`` govern prefill compression; the
+    remaining fields govern the decode-native path
+    (:mod:`repro.serve.kv_cache`) and adaptive per-head rank.
+    """
+
     rank: int = 16
     oversample: int = 4  # c = r = oversample·rank for the Alg. 3 sketches
     panel: int = 1024  # prefill streaming panel (tokens)
+    decode_panel: int = 64  # decode-native fold width (generated tokens)
+    refresh_every: int = 256  # refactorize after this many folded tokens
+    adaptive: bool = False  # per-head rank from a shared KV·rank budget
+    min_rank: int = 4  # adaptive floor per head
+    max_rank: Optional[int] = None  # adaptive cap per head (default 2·rank)
+
+    def __post_init__(self):
+        """Validate the decode/adaptive schedule at construction time."""
+        if self.refresh_every % self.decode_panel:
+            raise ValueError(
+                f"refresh_every={self.refresh_every} must be a multiple of "
+                f"decode_panel={self.decode_panel} (refresh fires on fold boundaries)"
+            )
+        if self.adaptive and self.min_rank > self.rank:
+            raise ValueError(
+                f"adaptive floor min_rank={self.min_rank} exceeds the per-head "
+                f"budget share rank={self.rank}"
+            )
 
 
 @dataclasses.dataclass
@@ -45,6 +87,9 @@ class LowRankKV:
     u: jax.Array  # (..., d, r)
 
 
+jax.tree_util.register_dataclass(LowRankKV, data_fields=["v_s", "sigma", "u"], meta_fields=[])
+
+
 def _sizes(d: int, kc: KVCompressionConfig) -> dict:
     # c is capped by the source dim d (C spans at most R^d), but the GMR
     # sketches must stay strictly larger than c to be subspace embeddings —
@@ -53,27 +98,82 @@ def _sizes(d: int, kc: KVCompressionConfig) -> dict:
     return dict(c=c, r=c, c0=2 * c, r0=2 * c, s_c=3 * c, s_r=3 * c)
 
 
-def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
-    """hist: (S, d) one head's K or V history → rank-r factors (single pass).
+def _fac_width(d: int, kc: KVCompressionConfig) -> int:
+    # stored factor width: the uniform rank, or the adaptive cap (budget is
+    # enforced by sigma masking — see _allocate_ranks)
+    c = _sizes(d, kc)["c"]
+    if not kc.adaptive:
+        return min(c, kc.rank)
+    cap = kc.max_rank if kc.max_rank is not None else 2 * kc.rank
+    return min(c, cap)
 
-    Streams Aᵀ = histᵀ (d, S) column panels through Algorithm 3.
-    """
-    S, d = hist.shape
-    sizes = _sizes(d, kc)
+
+def _engine_init(key, d: int, n_cols: int, kc: KVCompressionConfig, *, panel=None):
     # osnap_p=4: at KV head dims the inner S_C/S_R must embed all of R^d;
     # p=2 leaves ~10% odds of a double hash collision annihilating a
     # direction (cond(S_C U_C) ~ 1e7 → 0.1+ reconstruction error).
-    state = sp_svd_init(key, d, S, sizes=sizes, dtype=jnp.float32, osnap_p=4)
+    return spsvd_engine_init(
+        key, d, n_cols, sizes=_sizes(d, kc), dtype=jnp.float32, osnap_p=4, panel=panel
+    )
+
+
+def _compress_core(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
+    # pure-jax per-head core (vmap/jit-safe): scan the full panels of
+    # Hᵀ (d, S) at absolute offsets, fold the ragged tail as one exact
+    # static-width panel, finalize at the stored factor width.
+    S, d = hist.shape
     panel = min(kc.panel, S)
+    state = _engine_init(key, d, S, kc)
+    hist_T = hist.T.astype(jnp.float32)
     n_full = S // panel
-    with span("serve/kv_compress/prefill"):
-        for i in range(n_full):
-            state = sp_svd_update(state, hist[i * panel : (i + 1) * panel].T.astype(jnp.float32))
-        if S % panel:
-            state = sp_svd_update(state, hist[n_full * panel :].T.astype(jnp.float32))
-    with span("serve/kv_compress/finalize"):
-        U, sig, V = sp_svd_finalize(state, k=kc.rank)  # A=histᵀ: U (d,r), V (S,r)
+    if n_full:
+        state = scan_panels(state, hist_T, n_full, panel)
+    if S % panel:
+        state = panel_update(state, hist_T[:, n_full * panel :])
+    U, sig, V = spsvd_engine_finalize(state, k=_fac_width(d, kc))
     return LowRankKV(v_s=V, sigma=sig, u=U)
+
+
+def compress_history(key, hist: jax.Array, kc: KVCompressionConfig) -> LowRankKV:
+    """hist: (S, d) one head's K or V history → rank-r factors (single pass).
+
+    Host-level convenience wrapper: streams Aᵀ = histᵀ (d, S) through the
+    engine's scan-compiled :func:`repro.stream.stream_panels` driver (state
+    buffers donated, ragged tail zero-padded exactly). The batched serving
+    path (:func:`compress_head_batch`) maps the same panel core over
+    (batch, kv-head) instead, so both produce identical factors for a
+    shared key.
+    """
+    S, d = hist.shape
+    panel = min(kc.panel, S)
+    state = _engine_init(key, d, S, kc, panel=panel)
+    with span("serve/kv_compress/prefill"):
+        state = stream_panels(state, hist.T.astype(jnp.float32), panel)
+    with span("serve/kv_compress/finalize"):
+        U, sig, V = spsvd_engine_finalize(state, k=_fac_width(d, kc))
+    return LowRankKV(v_s=V, sigma=sig, u=U)
+
+
+@partial(jax.jit, static_argnames="kc")
+def _compress_batch(keys, hist, kc: KVCompressionConfig):
+    # one compiled program per (B, KV, S, d, kc): the scan over panels is
+    # vmapped across batch and head axes — prefill compression for a whole
+    # request batch is a single fused dispatch
+    per_head = lambda k, h: _compress_core(k, h, kc)
+    return jax.vmap(jax.vmap(per_head))(keys, hist)
+
+
+@partial(jax.jit, static_argnames="kc")
+def _allocate_ranks(sigma, kc: KVCompressionConfig):
+    # shared budget KV·rank per request, spent on σ² marginals (descending
+    # per head by construction) — the admission greedy at head granularity
+    B, KV, fw = sigma.shape
+    floor = min(kc.min_rank, fw)
+    alloc = jax.vmap(
+        lambda s: allocate_shared_budget(s * s, KV * kc.rank, floor=floor, cap=fw)
+    )(sigma)
+    keep = jnp.arange(fw)[None, None, :] < alloc[:, :, None]
+    return jnp.where(keep, sigma, 0.0), alloc
 
 
 def compress_head_batch(
@@ -85,33 +185,40 @@ def compress_head_batch(
 ) -> LowRankKV:
     """hist: (B, KV, S, d) → vmapped factors (B, KV, ...).
 
+    One fused scan program per head-batch shape (see
+    :func:`_compress_batch`). With ``kc.adaptive`` the per-head rank is
+    re-allocated from the shared ``KV·rank`` budget by zeroing the tail of
+    each head's ``sigma`` (factors are stored at the ``max_rank`` width;
+    masked directions contribute nothing to decode attention).
+
     When the active registry (``registry=`` or the process default) is
-    enabled, per-head compression-quality metrics are recorded *outside*
-    the vmapped compute: a ``serve/kv_rel_err`` histogram (one relative
-    reconstruction error per head — costs one rank-r reconstruction per
-    head, observability only), the ``serve/kv_compression_ratio`` gauge
-    (dense vs factor floats), and a ``serve/kv_heads_compressed`` counter.
+    enabled, compression-quality metrics are recorded via **one** batched
+    device computation and a **single** host transfer
+    (:meth:`repro.obs.metrics.MetricsRegistry.record_kv_compression`):
+    the ``serve/kv_rel_err`` histogram (one relative reconstruction error
+    per head), the ``serve/kv_compression_ratio`` gauge, the
+    ``serve/kv_heads_compressed`` counter, and — adaptive only — the
+    ``serve/kv_head_rank`` histogram of allocated ranks.
     """
     reg = registry if registry is not None else default_registry()
     B, KV, S, d = hist.shape
     keys = jax.random.split(key, B * KV).reshape(B, KV)
-    fn = lambda k, h: compress_history(k, h, kc)
-    inner = jax.vmap(fn, in_axes=(0, 0))
-    outer = jax.vmap(inner, in_axes=(0, 0))
+    ranks = None
     with span("serve/kv_compress/head_batch", reg):
-        out = outer(keys, hist)
-    fac = LowRankKV(v_s=out.v_s, sigma=out.sigma, u=out.u)
+        fac = _compress_batch(keys, hist, kc)
+        if kc.adaptive:
+            sigma, ranks = _allocate_ranks(fac.sigma, kc)
+            fac = LowRankKV(v_s=fac.v_s, sigma=sigma, u=fac.u)
     if reg.enabled and not isinstance(hist, jax.core.Tracer):
-        errs = jax.vmap(jax.vmap(compression_error))(hist, fac)
-        for e in np.asarray(errs).ravel():
-            reg.observe("serve/kv_rel_err", float(e))
-        reg.inc("serve/kv_heads_compressed", B * KV)
+        errs = _batched_error(hist, fac)
         r = fac.sigma.shape[-1]
-        reg.set_gauge("serve/kv_compression_ratio", (S * d) / ((S + d + 1) * r))
+        reg.record_kv_compression(errs, ratio=(S * d) / ((S + d + 1) * r), ranks=ranks)
     return fac
 
 
-jax.tree_util.register_dataclass(LowRankKV, data_fields=["v_s", "sigma", "u"], meta_fields=[])
+_batched_error = jax.jit(
+    lambda hist, fac: jax.vmap(jax.vmap(lambda h, f: compression_error(h, f)))(hist, fac)
+)
 
 
 def lowrank_decode_attention(

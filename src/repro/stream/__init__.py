@@ -52,6 +52,7 @@ from .adaptive import (
     AdaptiveRowState,
     adaptive_cur_finalize,
     adaptive_cur_init,
+    allocate_shared_budget,
 )
 
 __all__ = [
@@ -60,5 +61,5 @@ __all__ = [
     "padded_n", "copy_selected_columns", "truncated_R",
     "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
     "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "AdaptiveRowState",
-    "adaptive_cur_finalize", "adaptive_cur_init",
+    "adaptive_cur_finalize", "adaptive_cur_init", "allocate_shared_budget",
 ]

@@ -105,7 +105,56 @@ __all__ = [
     "ADAPTIVE_CUR_TEL_OPS",
     "adaptive_cur_init",
     "adaptive_cur_finalize",
+    "allocate_shared_budget",
 ]
+
+
+def allocate_shared_budget(
+    scores: jax.Array, budget: int, *, floor: int = 0, cap: "int | None" = None
+) -> jax.Array:
+    """Split a shared rank ``budget`` across groups by greedy marginal gain.
+
+    The streaming-CUR admission machinery above scores *columns* and spends
+    a slot budget on the highest-residual ones; this is the same greedy at
+    *group* granularity (the serving stack's groups are KV heads): each
+    group ``g`` offers marginal gains ``scores[g, j]`` for its ``j``-th rank
+    unit, and the budget is spent one unit at a time on the globally best
+    remaining marginal — one fused :func:`jax.lax.top_k` over the flattened
+    eligible window, exactly the admission kernel's selection primitive.
+
+    Args:
+        scores: ``(G, K)`` per-group marginal-gain ladders, **sorted
+            descending along the last axis** (e.g. singular values or
+            energies ``σ²``); with non-increasing ladders the global greedy
+            is prefix-consistent, so the result is a valid per-group rank.
+        budget: total units to allocate (static). Must satisfy
+            ``budget >= G * floor``.
+        floor: guaranteed minimum units per group (static).
+        cap: per-group maximum (static; default ``K``). Units beyond ``cap``
+            are never allocated even if budget remains.
+
+    Returns:
+        ``(G,)`` int32 allocation with ``floor <= out[g] <= cap`` and
+        ``out.sum() <= budget``. Non-positive marginals are never bought
+        (a group with a dead spectrum tail keeps its floor), so the sum can
+        undershoot the budget.
+    """
+    G, K = scores.shape
+    cap = K if cap is None else min(int(cap), K)
+    if floor < 0 or cap < floor:
+        raise ValueError(f"need 0 <= floor <= cap, got floor={floor} cap={cap}")
+    extra = int(budget) - G * floor
+    if extra < 0:
+        raise ValueError(f"budget {budget} cannot cover floor {floor} x {G} groups")
+    W = cap - floor
+    if W == 0 or extra == 0:
+        return jnp.full((G,), floor, jnp.int32)
+    window = scores[:, floor:cap].reshape(-1)  # (G*W,) marginal gains
+    k = min(extra, G * W)
+    vals, idx = jax.lax.top_k(window, k)
+    picks = (vals > 0).astype(jnp.int32)  # dead marginals are never bought
+    counts = jnp.zeros((G,), jnp.int32).at[idx // W].add(picks)
+    return floor + counts
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,182 @@
+"""Decode-native compressed KV cache: engine parity, refresh, attention."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.svd import spsvd_engine_finalize
+from repro.models.attention import decode_attention
+from repro.serve import KVCompressionConfig, compression_error, LowRankKV
+from repro.serve.kv_cache import _convert_one, _head_keys, cache_nbytes, init_compressed_kv
+from repro.serve.kv_compress import _engine_init
+from repro.stream.engine import panel_update
+
+
+def _lowrank_heads(key, B, KV, S, d, r):
+    ka, kb = jax.random.split(key)
+    coef = jax.random.normal(ka, (B, KV, S, r))
+    basis = jax.random.normal(kb, (B, KV, r, d))
+    return jnp.einsum("bksr,bkrd->bksd", coef, basis)  # (B, KV, S, d)
+
+
+def _decode_stream(cache, k_seq, v_seq, q_seq, start):
+    """Drive append_attend over k_seq/v_seq (B, T, KV, hd); returns outputs."""
+    step = jax.jit(lambda c, q, k, v, ln: c.append_attend(q, k, v, ln))
+    outs = []
+    for t in range(k_seq.shape[1]):
+        ln = jnp.asarray(start + t, jnp.int32)
+        o, cache = step(cache, q_seq[:, t][:, None], k_seq[:, t][:, None], v_seq[:, t][:, None], ln)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), cache
+
+
+def test_append_engine_state_matches_manual_stream():
+    """Strict parity: the cache's fold path produces the same per-head engine
+    accumulators as manually panel-updating a reference engine built from
+    the documented key derivation."""
+    B, KV, hd, n_max = 1, 2, 16, 64
+    kc = KVCompressionConfig(rank=4, oversample=2, panel=16, decode_panel=4, refresh_every=8)
+    hist = _lowrank_heads(jax.random.key(0), B, KV, n_max, hd, 3)
+    k_dense = hist.transpose(0, 2, 1, 3)
+    v_dense = k_dense[..., ::-1]
+    prompt = 24
+    key = jax.random.key(42)
+    cache = _convert_one(key, k_dense, v_dense, prompt_len=prompt, kc=kc)
+
+    # reference: same key derivation, stream prompt then the decode panels
+    ref_keys = _head_keys(jax.random.fold_in(key, 0), B, KV)
+    ref = jax.vmap(jax.vmap(lambda k: _engine_init(k, hd, n_max, kc)))(ref_keys)
+    upd = jax.vmap(jax.vmap(panel_update))
+    hists = k_dense.transpose(0, 2, 3, 1).astype(jnp.float32)  # (B,KV,hd,n_max)
+    ref = upd(ref, hists[..., :16])
+    ref = upd(ref, hists[..., 16:prompt])
+    np.testing.assert_allclose(np.asarray(cache.k_eng.C), np.asarray(ref.C), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache.k_eng.M), np.asarray(ref.M), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache.k_eng.R), np.asarray(ref.R), atol=1e-4)
+
+    # decode two panels (8 tokens) → one fold boundary + refresh at 32
+    T = 8
+    k_seq = k_dense[:, prompt : prompt + T]
+    v_seq = v_dense[:, prompt : prompt + T]
+    q_seq = jax.random.normal(jax.random.key(3), (B, T, KV * 2, hd))
+    _, cache = _decode_stream(cache, k_seq, v_seq, q_seq, prompt)
+    assert int(cache.eng_len) == prompt + T
+    assert int(cache.fac_len) == prompt + T  # refresh fired at 24+8
+
+    for lo in range(prompt, prompt + T, kc.decode_panel):
+        ref = upd(ref, hists[..., lo : lo + kc.decode_panel])
+    np.testing.assert_allclose(np.asarray(cache.k_eng.C), np.asarray(ref.C), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache.k_eng.M), np.asarray(ref.M), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cache.k_eng.R), np.asarray(ref.R), atol=1e-4)
+
+
+def test_incremental_refresh_matches_recompress_from_scratch():
+    """After a refresh, the incrementally maintained factors reconstruct the
+    full prefix as well as a from-scratch single-shot compression (same
+    sketches → same accumulators up to fp summation order)."""
+    B, KV, hd, n_max = 1, 2, 16, 96
+    kc = KVCompressionConfig(rank=6, oversample=2, panel=32, decode_panel=4, refresh_every=16)
+    hist = _lowrank_heads(jax.random.key(1), B, KV, n_max, hd, 4)
+    k_dense = hist.transpose(0, 2, 1, 3)
+    v_dense = k_dense
+    prompt, T = 32, 16
+    key = jax.random.key(7)
+    cache = _convert_one(key, k_dense, v_dense, prompt_len=prompt, kc=kc)
+    q_seq = jax.random.normal(jax.random.key(4), (B, T, KV * 2, hd))
+    _, cache = _decode_stream(
+        cache, k_dense[:, prompt : prompt + T], v_dense[:, prompt : prompt + T], q_seq, prompt
+    )
+    covered = prompt + T
+    assert int(cache.fac_len) == covered  # refresh at 48
+
+    # from-scratch: stream tokens [0, covered) through a fresh engine with
+    # the SAME key derivation → factors must agree to fp tolerance
+    scratch = _convert_one(key, k_dense, v_dense, prompt_len=covered, kc=kc)
+    fw = cache.k_fac.sigma.shape[-1]
+    np.testing.assert_allclose(
+        np.asarray(cache.k_fac.sigma), np.asarray(scratch.k_fac.sigma), rtol=1e-3, atol=1e-4
+    )
+    # compare reconstructions (factor signs/rotations can differ)
+    def rec(fac):
+        return jnp.einsum(
+            "bksr,bkr,bkdr->bksd", fac.v_s[:, :, :covered], fac.sigma, fac.u
+        )
+    np.testing.assert_allclose(
+        np.asarray(rec(cache.k_fac)), np.asarray(rec(scratch.k_fac)), atol=1e-3
+    )
+    # and both reconstruct the true low-rank history
+    err = jnp.linalg.norm(rec(cache.k_fac) - hist[:, :, :covered]) / jnp.linalg.norm(
+        hist[:, :, :covered]
+    )
+    assert float(err) < 0.05, float(err)
+
+
+def test_append_attend_matches_dense_attention():
+    """On low-rank history the compressed cache's joint factor+recent
+    attention tracks exact dense decode attention through folds/refreshes."""
+    B, KV, G, hd, n_max = 2, 2, 2, 16, 96
+    H = KV * G
+    kc = KVCompressionConfig(rank=6, oversample=2, panel=32, decode_panel=4, refresh_every=8)
+    k_hist = _lowrank_heads(jax.random.key(5), B, KV, n_max, hd, 4)
+    v_hist = _lowrank_heads(jax.random.key(6), B, KV, n_max, hd, 4)
+    k_dense = k_hist.transpose(0, 2, 1, 3)
+    v_dense = v_hist.transpose(0, 2, 1, 3)
+    prompt, T = 37, 30
+    cache = _convert_one(jax.random.key(8), k_dense, v_dense, prompt_len=prompt, kc=kc)
+
+    dk = k_dense.at[:, prompt:].set(0.0)
+    dv = v_dense.at[:, prompt:].set(0.0)
+    step = jax.jit(lambda c, q, k, v, ln: c.append_attend(q, k, v, ln))
+    for t in range(T):
+        ln = jnp.asarray(prompt + t, jnp.int32)
+        q = jax.random.normal(jax.random.fold_in(jax.random.key(9), t), (B, 1, H, hd))
+        kn, vn = k_dense[:, prompt + t][:, None], v_dense[:, prompt + t][:, None]
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, kn, prompt + t, axis=1)
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, vn, prompt + t, axis=1)
+        o_ref = decode_attention(q, dk, dv, ln + 1)
+        o, cache = step(cache, q, kn, vn, ln)
+        cos = jnp.sum(o * o_ref) / (jnp.linalg.norm(o) * jnp.linalg.norm(o_ref))
+        assert float(cos) > 0.999, (t, float(cos))
+
+
+def test_init_compressed_kv_empty_then_stream():
+    """A fresh cache (no prefix) decodes from token 0: factors stay inert
+    until the first refresh, the recent window carries everything."""
+    B, KV, G, hd = 1, 2, 2, 16
+    H = KV * G
+    kc = KVCompressionConfig(rank=4, oversample=2, panel=16, decode_panel=2, refresh_every=4)
+    cache = init_compressed_kv(
+        jax.random.key(0), kc, batch=B, n_kv_heads=KV, head_dim=hd, n_max=32
+    )
+    assert int(cache.fac_len) == 0 and int(cache.eng_len) == 0
+    k_hist = _lowrank_heads(jax.random.key(2), B, KV, 12, hd, 3).transpose(0, 2, 1, 3)
+    q_seq = jax.random.normal(jax.random.key(3), (B, 12, H, hd))
+    outs, cache = _decode_stream(cache, k_hist, k_hist, q_seq, 0)
+    assert outs.shape == (B, 12, H, hd)
+    assert int(cache.eng_len) == 12
+    assert int(cache.fac_len) == 12  # refreshes every 4 tokens
+    assert np.isfinite(np.asarray(outs)).all()
+
+
+def test_cache_nbytes_counts_engine_state():
+    """Honest accounting: the engine carry (C/R/M + sketches) is included,
+    and the total is itemsize-aware."""
+    kc = KVCompressionConfig(rank=4, oversample=2, panel=16, decode_panel=4, refresh_every=8)
+    cache = init_compressed_kv(
+        jax.random.key(0), kc, batch=1, n_kv_heads=2, head_dim=16, n_max=64
+    )
+    total = cache_nbytes(cache)
+    eng = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache.k_eng))
+    fac = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(cache.k_fac))
+    assert total > 2 * eng and total > 2 * fac  # both halves counted
+    assert cache_nbytes({"k": jnp.zeros((4, 4), jnp.bfloat16)}) == 32
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="multiple"):
+        KVCompressionConfig(decode_panel=3, refresh_every=8)
+    with pytest.raises(ValueError, match="floor"):
+        KVCompressionConfig(rank=4, adaptive=True, min_rank=8)

@@ -93,3 +93,112 @@ def test_temperature_sampling_in_range():
     prompt = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
     out = generate(params, cfg, prompt, 6, temperature=1.0, key=jax.random.key(5))
     assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size
+
+
+def test_engine_compress_matches_legacy_loop():
+    """The engine-based compress_history reproduces the legacy per-panel
+    sp_svd_* loop factors exactly (shared key → shared sketches)."""
+    from repro.core.svd import sp_svd_finalize, sp_svd_init, sp_svd_update
+    from repro.serve.kv_compress import _fac_width, _sizes
+
+    S, d = 200, 32
+    kc = KVCompressionConfig(rank=8, oversample=2, panel=64)
+    hist = jax.random.normal(jax.random.key(20), (S, d))
+    key = jax.random.key(21)
+    fac = compress_history(key, hist, kc)
+
+    state = sp_svd_init(key, d, S, sizes=_sizes(d, kc), dtype=jnp.float32, osnap_p=4)
+    panel = min(kc.panel, S)
+    hist_T = hist.T.astype(jnp.float32)
+    for off in range(0, S, panel):
+        state = sp_svd_update(state, hist_T[:, off : off + panel])
+    U, sig, V = sp_svd_finalize(state, k=_fac_width(d, kc))
+    np.testing.assert_allclose(np.asarray(fac.sigma), np.asarray(sig), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fac.u), np.asarray(U), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fac.v_s), np.asarray(V), atol=1e-4)
+
+
+def test_kv_compress_has_no_legacy_loop_calls():
+    """Acceptance guard: serve/kv_compress.py runs on the engine API only."""
+    import inspect
+
+    import repro.serve.kv_compress as m
+
+    src = inspect.getsource(m)
+    for banned in ("sp_svd_init", "sp_svd_update", "sp_svd_finalize"):
+        assert banned not in src, banned
+
+
+def test_adaptive_rank_beats_uniform_at_equal_budget():
+    """Spiked-head cache: one head carries a heavy spectrum, the rest are
+    near rank-1. At the same total budget KV·rank, the shared-budget
+    allocation concentrates rank on the heavy head and wins on total
+    reconstruction error."""
+    B, KV, S, d = 1, 4, 160, 32
+    rich = jax.random.normal(jax.random.key(30), (S, 12)) @ \
+        jax.random.normal(jax.random.key(31), (12, d)) * 3.0
+    poor = jnp.stack([
+        jnp.outer(jax.random.normal(jax.random.fold_in(jax.random.key(32), i), (S,)),
+                  jax.random.normal(jax.random.fold_in(jax.random.key(33), i), (d,)))
+        + 0.01 * jax.random.normal(jax.random.fold_in(jax.random.key(34), i), (S, d))
+        for i in range(KV - 1)
+    ])
+    hist = jnp.concatenate([rich[None], poor])[None]  # (1, KV, S, d)
+
+    rank = 4  # total budget KV·rank = 16 < 12 + 3 needed for exactness
+    uni = compress_head_batch(
+        jax.random.key(35), hist, KVCompressionConfig(rank=rank, oversample=4, panel=64)
+    )
+    ada = compress_head_batch(
+        jax.random.key(35), hist,
+        KVCompressionConfig(rank=rank, oversample=4, panel=64,
+                            adaptive=True, min_rank=1, max_rank=14),
+    )
+    assert int((ada.sigma > 0).sum()) <= KV * rank  # equal effective budget
+    errs_u = jax.vmap(jax.vmap(compression_error))(hist, uni)
+    errs_a = jax.vmap(jax.vmap(compression_error))(hist, ada)
+    # energy-weighted total error: adaptive must win decisively
+    w = jnp.asarray([float(jnp.linalg.norm(hist[0, i])) for i in range(KV)])
+    tot_u = float(jnp.sum(errs_u[0] * w))
+    tot_a = float(jnp.sum(errs_a[0] * w))
+    assert tot_a < 0.5 * tot_u, (tot_a, tot_u)
+
+
+def test_generate_compressed_cache_smoke():
+    """Compressed-cache generation: right shape, deterministic, in-vocab."""
+    cfg = ARCHS["llama3.2-1b"].smoke_config()
+    params = init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab_size)
+    kc = KVCompressionConfig(rank=8, oversample=2, panel=16, decode_panel=2, refresh_every=4)
+    out1 = generate(params, cfg, prompt, 8, kv_compress=kc)
+    out2 = generate(params, cfg, prompt, 8, kv_compress=kc)
+    assert out1.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.min()) >= 0 and int(out1.max()) < cfg.vocab_size
+
+
+def test_fused_sampling_matches_legacy_host_loop():
+    """The jit-fused decode+sample step reproduces the legacy host-side
+    sampling loop token-for-token (same RNG fold chain) at temperature>0."""
+    from functools import partial
+
+    from repro.models import decode_step, prefill
+    from repro.serve import sample_token
+
+    cfg = ARCHS["llama3.2-1b"].smoke_config()
+    params = init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(1), (2, 10), 0, cfg.vocab_size)
+    n_tokens, temperature = 6, 0.8
+    key = jax.random.key(11)
+    out = generate(params, cfg, prompt, n_tokens, key=key, temperature=temperature)
+
+    logits, cache = prefill(params, cfg, prompt, prompt.shape[1] + n_tokens)
+    step = jax.jit(partial(decode_step, dense_moe=False), static_argnums=(1,))
+    k = key
+    toks = [sample_token(k, logits, temperature)]
+    for i in range(n_tokens - 1):
+        k = jax.random.fold_in(k, i)
+        logits, cache = step(params, cfg, cache, toks[-1])
+        toks.append(sample_token(k, logits, temperature))
+    legacy = jnp.concatenate(toks, axis=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))

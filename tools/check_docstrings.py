@@ -3,7 +3,8 @@
 Two checks:
 
 1. **Docstring audit** — every *public* API in the audited packages
-   (``repro.stream``, ``repro.cur``, ``repro.spsd``, ``repro.obs``) must
+   (``repro.stream``, ``repro.cur``, ``repro.spsd``, ``repro.obs``,
+   ``repro.serve``) must
    carry a docstring: module-level
    functions and classes, public methods/properties of public classes, and
    the modules themselves. Public = not ``_``-prefixed and defined inside
@@ -30,7 +31,7 @@ import pkgutil
 import re
 import sys
 
-AUDITED_PACKAGES = ["repro.stream", "repro.cur", "repro.spsd", "repro.obs"]
+AUDITED_PACKAGES = ["repro.stream", "repro.cur", "repro.spsd", "repro.obs", "repro.serve"]
 
 PAPER_MAP = os.path.join(os.path.dirname(__file__), "..", "docs", "paper_map.md")
 
