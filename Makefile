@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all smoke bench docs-check perf-check obs-check
+.PHONY: test test-slow test-all smoke bench docs-check perf-check obs-check chaos-check
 
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
@@ -36,6 +36,10 @@ obs-check:  ## telemetry acceptance: <=1.3x paired-row overhead + HLO/bitwise id
 	$(PY) -m benchmarks.check_regression --fresh /tmp/obs-check/BENCH_stream.json \
 	    --overhead-suffix "+tel" --overhead-threshold 1.3
 	$(PY) -m pytest -q tests/test_obs.py -k "hlo or bitwise"
+
+chaos-check:  ## stream suite under seeded FaultPlan (crash + NaN + straggler): zero factor divergence
+	$(PY) tools/chaos_check.py
+	$(PY) -m pytest -q tests/test_resilient.py
 
 bench:  ## full benchmark harness, CSV on stdout
 	$(PY) -m benchmarks.run

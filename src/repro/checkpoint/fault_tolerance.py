@@ -33,6 +33,9 @@ class LoopReport:
     stragglers: int = 0
     final_metrics: Optional[dict] = None
     losses: list = dataclasses.field(default_factory=list)
+    # extra metadata of the last checkpoint restored from (initial resume or
+    # mid-run restart); None if the loop never restored
+    restored_extra: Optional[dict] = None
 
 
 def run_resilient_loop(
@@ -52,10 +55,20 @@ def run_resilient_loop(
 ) -> LoopReport:
     report = LoopReport()
 
+    def _carry_extra(extra: dict):
+        """Preserve restored checkpoint metadata across the restart: record
+        it on the report and fold it (minus the loop-owned ``data_state``)
+        back into what subsequent saves write, caller keys winning."""
+        nonlocal extra_meta
+        report.restored_extra = extra
+        carried = {k: v for k, v in extra.items() if k != "data_state"}
+        extra_meta = {**carried, **(extra_meta or {})}
+
     # resume if a checkpoint exists
     start = 0
     if ckpt.latest_step(ckpt_dir) is not None:
         state, extra, start = ckpt.restore(ckpt_dir, state, shardings=state_shardings)
+        _carry_extra(extra)
         log.info("resumed from step %d", start)
 
     step = start
@@ -104,5 +117,11 @@ def run_resilient_loop(
             if last is None:
                 step = 0  # no checkpoint yet — replay from scratch
             else:
-                state, _, step = ckpt.restore(ckpt_dir, state, shardings=state_shardings)
+                state, extra, step = ckpt.restore(
+                    ckpt_dir, state, shardings=state_shardings
+                )
+                _carry_extra(extra)
+            # the first post-restart step recompiles; a stale median would
+            # flag it as a straggler and then drag the median itself
+            step_times = []
     return report

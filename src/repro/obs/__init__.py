@@ -29,6 +29,7 @@ from .telemetry import (
     EVENT_ADMIT,
     EVENT_BUDGET_FULL,
     EVENT_EVICT,
+    EVENT_QUARANTINED,
     EVENT_ROW_ADMIT,
     TelemetryFrame,
     adaptive_stream_telemetry,
@@ -47,6 +48,7 @@ __all__ = [
     "EVENT_EVICT",
     "EVENT_ROW_ADMIT",
     "EVENT_BUDGET_FULL",
+    "EVENT_QUARANTINED",
     "estimate_rel_error",
     "low_rank_apply",
     "MetricsRegistry",

@@ -60,6 +60,7 @@ __all__ = [
     "EVENT_EVICT",
     "EVENT_ROW_ADMIT",
     "EVENT_BUDGET_FULL",
+    "EVENT_QUARANTINED",
 ]
 
 # ``events`` bitmask: what happened in panel t.
@@ -67,6 +68,7 @@ EVENT_ADMIT = 1  # ≥1 column admitted
 EVENT_EVICT = 2  # ≥1 column evicted (adaptive swap_gain policy)
 EVENT_ROW_ADMIT = 4  # ≥1 row admitted (adaptive rows)
 EVENT_BUDGET_FULL = 8  # the worker's column budget is full after this panel
+EVENT_QUARANTINED = 16  # panel carried NaN/Inf and was zero-scaled in-scan
 
 _QUANTILES = (0.0, 25.0, 50.0, 75.0, 100.0)
 
@@ -309,6 +311,7 @@ def telemetry_summary(state_or_tel) -> dict:
     names = (
         (EVENT_ADMIT, "admit"), (EVENT_EVICT, "evict"),
         (EVENT_ROW_ADMIT, "row_admit"), (EVENT_BUDGET_FULL, "budget_full"),
+        (EVENT_QUARANTINED, "quarantined"),
     )
     events = np.asarray(tel.events)
     # Nearest-rank score quantiles per panel, computed here (host-side)

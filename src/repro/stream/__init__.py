@@ -17,6 +17,12 @@ derives ``R = Cᵀ``) — which plug in as :class:`PanelOps`. On top:
   backfill, all scored from the sketches alone — fused per panel through
   the engine's ``sketch_panel`` hook (Pallas ``panel_score`` kernel on
   TPU).
+* :mod:`~repro.stream.resilient` — fault-tolerant ingestion: resumable
+  checkpointed drives with a ``panels_consumed`` cursor
+  (``run_resilient_stream``), deterministic panel-level fault injection
+  (``FaultPlan``), in-scan quarantine of non-finite panels
+  (``with_quarantine``), and per-worker checkpointed sharded resume
+  (``run_resilient_sharded_stream``) — see ``docs/resilience.md``.
 
 The hot path is scan-compiled: :func:`stream_panels` runs each chunk as one
 ``lax.scan`` program with donated state buffers (input states are
@@ -39,6 +45,8 @@ from .engine import (
     scan_panels,
     stream_panels,
     truncated_R,
+    with_quarantine,
+    zero_nonfinite_panels,
 )
 from .distributed import (
     merge_states,
@@ -54,12 +62,31 @@ from .adaptive import (
     adaptive_cur_init,
     allocate_shared_budget,
 )
+from .resilient import (
+    ArrayPanelSource,
+    FaultInjector,
+    FaultPlan,
+    InjectedCrash,
+    PanelSource,
+    QuarantineAbort,
+    StreamReport,
+    TransientReadError,
+    restore_stream_state,
+    run_resilient_sharded_stream,
+    run_resilient_stream,
+    save_stream_state,
+)
 
 __all__ = [
     "PanelOps", "PanelState", "panel_update", "jitted_panel_update",
     "stream_panels", "scan_chunk", "scan_panels", "fresh_pytree",
     "padded_n", "copy_selected_columns", "truncated_R",
+    "with_quarantine", "zero_nonfinite_panels",
     "merge_states", "mesh_sharded_stream", "shard_panel_ranges", "simulate_sharded_stream",
     "ADAPTIVE_CUR_OPS", "AdaptiveCURCtx", "AdaptiveRowState",
     "adaptive_cur_finalize", "adaptive_cur_init", "allocate_shared_budget",
+    "ArrayPanelSource", "FaultInjector", "FaultPlan", "InjectedCrash",
+    "PanelSource", "QuarantineAbort", "StreamReport", "TransientReadError",
+    "restore_stream_state", "run_resilient_sharded_stream",
+    "run_resilient_stream", "save_stream_state",
 ]

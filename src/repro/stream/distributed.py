@@ -104,8 +104,13 @@ def merge_states(states: Sequence[PanelState]) -> PanelState:
     tel = base.tel
     if tel is not None:
         tel = tel.merge([s.tel for s in states])
+    quarantined = base.quarantined
+    if quarantined is not None:
+        # per-worker quarantine counts are disjoint panel tallies — sum
+        quarantined = sum((s.quarantined for s in states[1:]), quarantined)
     merged = dataclasses.replace(
-        base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx, tel=tel
+        base, C=C, R=R, M=M, offset=jnp.asarray(base.n, jnp.int32), ctx=ctx, tel=tel,
+        quarantined=quarantined,
     )
     if base.ops.merge_state is not None:
         merged = base.ops.merge_state(merged)
@@ -298,6 +303,11 @@ def mesh_sharded_stream(
             ctx=ctx,
             # telemetry reduces with the same disjoint-write algebra as C/R/M
             tel=st.tel.collective(axis) if st.tel is not None else None,
+            quarantined=(
+                jax.lax.psum(st.quarantined, axis)
+                if st.quarantined is not None
+                else None
+            ),
         )
         return ops.merge_state(st) if ops.merge_state is not None else st
 

@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from ..obs.spans import span
-from ..obs.telemetry import fold_psi_chunk
+from ..obs.telemetry import EVENT_QUARANTINED, fold_psi_chunk
 
 __all__ = [
     "PanelOps",
@@ -74,6 +74,8 @@ __all__ = [
     "fresh_pytree",
     "copy_selected_columns",
     "truncated_R",
+    "with_quarantine",
+    "zero_nonfinite_panels",
 ]
 
 
@@ -196,6 +198,14 @@ class PanelState:
     (:class:`repro.obs.telemetry.TelemetryFrame`): ``None`` — the default —
     contributes no pytree leaves, so untelemetered states keep their
     pre-telemetry treedef, jit cache keys and donation layout.
+
+    ``quarantined`` is the optional graceful-degradation counter
+    (:func:`with_quarantine`): ``None`` — the default — contributes no
+    leaves and compiles to the exact pre-quarantine program; a ``()`` int32
+    arms the in-scan non-finite panel guard, which zero-scales any panel
+    carrying a NaN/Inf entry (its contribution to C/R/M becomes *exactly*
+    that of an all-zero panel) and counts it here instead of letting one
+    corrupt panel poison every accumulator downstream.
     """
 
     C: jax.Array  # (m, c)
@@ -206,6 +216,7 @@ class PanelState:
     ops: PanelOps  # static
     n: int  # static: true column count
     tel: Any = None  # optional in-scan telemetry frame (repro.obs)
+    quarantined: Any = None  # optional () int32 — non-finite panels zeroed in-scan
 
     def __getattr__(self, name):
         # Back-compat with the pre-engine SPSVDState / StreamingCURState
@@ -226,9 +237,49 @@ class PanelState:
 
 jax.tree_util.register_dataclass(
     PanelState,
-    data_fields=["C", "R", "M", "offset", "ctx", "tel"],
+    data_fields=["C", "R", "M", "offset", "ctx", "tel", "quarantined"],
     meta_fields=["ops", "n"],
 )
+
+
+def with_quarantine(state: PanelState) -> PanelState:
+    """Arm the in-scan non-finite panel guard on ``state``.
+
+    Returns the state with a zeroed ``()`` int32 ``quarantined`` counter
+    leaf. From then on every :func:`panel_update` checks the incoming panel
+    for NaN/Inf: a bad panel is zero-scaled (contributing exactly what an
+    all-zero panel would to C/R/M and the telemetry fold), the counter is
+    incremented, and — when the state carries telemetry — the panel's
+    ``EVENT_QUARANTINED`` bit is set in ``tel.events``. Idempotent; the
+    default un-armed state compiles to the byte-identical pre-quarantine
+    program because ``quarantined=None`` contributes no pytree leaves.
+    """
+    if state.quarantined is not None:
+        return state
+    return dataclasses.replace(state, quarantined=jnp.zeros((), jnp.int32))
+
+
+def zero_nonfinite_panels(block, panel: int):
+    """Zero every ``panel``-wide column group of ``block`` that carries a
+    NaN/Inf entry.
+
+    Host-callable *and* jit-traceable pre-filter matching the in-scan
+    quarantine guard's semantics at block granularity: the engine's scan
+    entry points run the estimator Ψ fold over the raw chunk *before* the
+    per-panel guard executes, so a quarantine-armed state sanitizes the
+    fold's input here — a quarantined panel must contribute zero to Ψ just
+    as it contributes zero to C/R/M. ``block`` columns are assumed
+    panel-aligned at column 0 (the engine always folds from a panel
+    boundary); a ragged tail is treated as its own (partial) panel.
+    """
+    m, w = block.shape
+    num_panels = padded_n(w, panel) // panel
+    padded = jnp.pad(block, ((0, 0), (0, num_panels * panel - w)))
+    fin = jnp.all(
+        jnp.isfinite(padded.reshape(m, num_panels, panel)), axis=(0, 2)
+    )  # (num_panels,) — per-panel finite flag
+    mask = jnp.repeat(fin, panel)[:w]
+    return jnp.where(mask[None, :], block, jnp.zeros((), block.dtype))
 
 
 def padded_n(n: int, panel: int) -> int:
@@ -257,6 +308,16 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
     off = state.offset
     ops = state.ops
 
+    quarantined = state.quarantined
+    bad = None
+    if quarantined is not None:
+        # Graceful degradation (see with_quarantine): a NaN/Inf panel is
+        # zero-scaled so its contribution to C/R/M is exactly an all-zero
+        # panel's, and counted instead of poisoning the accumulators.
+        bad = ~jnp.all(jnp.isfinite(A_L))
+        A_L = jnp.where(bad, jnp.zeros((), A_L.dtype), A_L)
+        quarantined = quarantined + bad.astype(jnp.int32)
+
     S_C, S_R = ops.core_sketches(state.ctx)
     if ops.sketch_panel is not None:
         # fused path: the application computes sc_a together with its
@@ -283,8 +344,17 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
     tel = state.tel
     if ops.telemetry is not None and tel is not None:
         tel = ops.telemetry(tel, state.ctx, ctx, A_L, sc_a, scores, off)
+    if bad is not None and tel is not None:
+        # Flag the quarantine in the panel's event bitmask. `.add` composes
+        # with the hook's `.set` above — the hook never writes this bit.
+        t = off // tel.panel
+        flag = jnp.where(bad, EVENT_QUARANTINED, 0).astype(jnp.int32)
+        tel = dataclasses.replace(tel, events=tel.events.at[t].add(flag))
 
-    return dataclasses.replace(state, C=C, R=R, M=M, offset=off + L, ctx=ctx, tel=tel)
+    return dataclasses.replace(
+        state, C=C, R=R, M=M, offset=off + L, ctx=ctx, tel=tel,
+        quarantined=quarantined,
+    )
 
 
 # Module-scope jit: one trace per (shapes, ops) pair for the whole process —
@@ -313,8 +383,13 @@ def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
         # whole chunk (inside the carry it costs ~3× standalone wall-time);
         # the chunk is consumed atomically by this program, so Ψ and the
         # factors agree at every program boundary
+        psi_in = A_chunk
+        if state.quarantined is not None:
+            # the fold sees the raw chunk before the per-panel guard runs —
+            # drop quarantined panels here too, or one NaN poisons Ψ
+            psi_in = zero_nonfinite_panels(A_chunk, panel)
         state = dataclasses.replace(
-            state, tel=fold_psi_chunk(state.tel, A_chunk, state.offset)
+            state, tel=fold_psi_chunk(state.tel, psi_in, state.offset)
         )
 
     def body(st, t):
@@ -342,6 +417,8 @@ def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) ->
         block = jax.lax.dynamic_slice_in_dim(
             A, state.offset, num_panels * panel, axis=1
         )
+        if state.quarantined is not None:
+            block = zero_nonfinite_panels(block, panel)
         state = dataclasses.replace(
             state, tel=fold_psi_chunk(state.tel, block, state.offset)
         )
@@ -417,8 +494,11 @@ def stream_panels(
         if state.ops.telemetry is not None and state.tel is not None:
             # parity with the scan path: Ψ folds once over the consumed
             # window, not per panel (same sum up to float association)
+            block = A[:, start:stop]
+            if state.quarantined is not None:
+                block = zero_nonfinite_panels(block, panel)
             state = dataclasses.replace(
-                state, tel=fold_psi_chunk(state.tel, A[:, start:stop], start)
+                state, tel=fold_psi_chunk(state.tel, block, start)
             )
         for off in range(start, stop, panel):
             width = min(panel, stop - off)

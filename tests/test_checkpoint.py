@@ -101,6 +101,145 @@ def test_resilient_loop_straggler_detection(tmp_path):
     assert report.stragglers >= 1
 
 
+def test_torn_write_skipped(tmp_path):
+    """A checkpoint directory damaged mid-save (truncated leaf, missing leaf,
+    garbage manifest) must never brick resume: it is skipped and the newest
+    intact step wins."""
+    t = _tree()
+    save(str(tmp_path), 1, t, keep_last=10)
+    save(str(tmp_path), 2, t, keep_last=10)
+
+    # truncate one leaf file of step 2 to zero bytes
+    step2 = tmp_path / "step_00000002"
+    leaf = next(p for p in step2.iterdir() if p.suffix == ".npy")
+    leaf.write_bytes(b"")
+    assert list_steps(str(tmp_path)) == [1]
+    assert latest_step(str(tmp_path)) == 1
+    out, _, step = restore(str(tmp_path), t)  # falls back, no crash
+    assert step == 1
+
+    # missing leaf file
+    leaf.unlink()
+    assert latest_step(str(tmp_path)) == 1
+
+    # garbage manifest
+    (step2 / "manifest.json").write_text("{not json")
+    assert latest_step(str(tmp_path)) == 1
+
+    # explicitly requesting the torn step raises a clear error
+    with pytest.raises(FileNotFoundError, match="torn"):
+        restore(str(tmp_path), t, step=2)
+
+
+def test_no_part_files_after_save(tmp_path):
+    save(str(tmp_path), 5, _tree())
+    ckpt = tmp_path / "step_00000005"
+    assert not any(p.name.endswith(".part") for p in ckpt.iterdir())
+
+
+def test_all_checkpoints_torn_raises(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    for p in (tmp_path / "step_00000001").iterdir():
+        if p.suffix == ".npy":
+            p.write_bytes(b"")
+    with pytest.raises(FileNotFoundError, match="no intact"):
+        restore(str(tmp_path), _tree())
+
+
+def test_resilient_loop_preserves_restored_extra(tmp_path):
+    """Restart hygiene: the extra metadata restored in the exception path is
+    kept — recorded on the report and re-written by subsequent saves."""
+    def step_fn(state, batch, step):
+        return {"x": state["x"] + 1.0}, {"loss": state["x"]}
+
+    report = run_resilient_loop(
+        state={"x": jnp.zeros(())}, step_fn=step_fn, batch_fn=lambda s: None,
+        n_steps=20, ckpt_dir=str(tmp_path), ckpt_every=5, fail_at_step=12,
+        extra_meta={"run_name": "hygiene"},
+    )
+    assert report.restarts == 1
+    assert report.restored_extra is not None
+    assert report.restored_extra["run_name"] == "hygiene"
+    _, extra, step = restore(str(tmp_path), {"x": jnp.zeros(())})
+    assert step == 20 and extra["run_name"] == "hygiene"
+
+
+def test_resilient_loop_restart_not_flagged_straggler(tmp_path):
+    """Restart hygiene: step times reset after a restore, so the slow first
+    post-restart step (recompile stand-in: injected sleep) is not flagged
+    against the pre-crash median."""
+    calls = {10: 0}
+
+    def step_fn(state, batch, step):
+        time.sleep(0.005)  # stable baseline so the median is not timer jitter
+        if step == 10:
+            calls[10] += 1
+            if calls[10] == 2:  # only the replayed execution is slow
+                time.sleep(0.3)
+        return {"x": state["x"] + 1.0}, {"loss": state["x"]}
+
+    report = run_resilient_loop(
+        state={"x": jnp.zeros(())}, step_fn=step_fn, batch_fn=lambda s: None,
+        n_steps=20, ckpt_dir=str(tmp_path), ckpt_every=5, fail_at_step=12,
+        straggler_factor=3.0,
+    )
+    assert report.restarts == 1 and calls[10] == 2
+    assert report.stragglers == 0
+
+
+def test_packed_roundtrip(tmp_path):
+    """pack=True writes a single step_<N>.ckpt file whose restore is
+    bit/dtype-identical (incl. the bfloat16 viewed path) to the tree."""
+    t = _tree()
+    path = save(str(tmp_path), 10, t, extra={"panels_consumed": 12}, pack=True)
+    assert path.endswith("step_00000010.ckpt") and os.path.isfile(path)
+    assert not os.path.isdir(tmp_path / "step_00000010")
+    out, extra, step = restore(str(tmp_path), t)
+    assert step == 10 and extra["panels_consumed"] == 12
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_packed_torn_file_skipped(tmp_path):
+    """Truncated or garbage-magic .ckpt files are skipped, newest intact wins."""
+    t = _tree()
+    save(str(tmp_path), 1, t, keep_last=10, pack=True)
+    save(str(tmp_path), 2, t, keep_last=10, pack=True)
+    f2 = tmp_path / "step_00000002.ckpt"
+    f2.write_bytes(f2.read_bytes()[:-5])  # torn tail: size != header claim
+    assert list_steps(str(tmp_path)) == [1]
+    out, _, step = restore(str(tmp_path), t)
+    assert step == 1
+    f2.write_bytes(b"NOTMAGIC" + b"\x00" * 64)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_packed_and_dir_layouts_interoperate(tmp_path):
+    """list_steps/GC/restore see both layouts in one directory."""
+    t = _tree()
+    save(str(tmp_path), 1, t, keep_last=10)  # per-leaf dir
+    save(str(tmp_path), 2, t, keep_last=10, pack=True)
+    assert list_steps(str(tmp_path)) == [1, 2]
+    _, _, step = restore(str(tmp_path), t)
+    assert step == 2
+    for s in (3, 4):
+        save(str(tmp_path), s, t, keep_last=2, pack=True)
+    assert list_steps(str(tmp_path)) == [3, 4]  # GC evicted both layouts
+
+
+def test_durable_false_roundtrip(tmp_path):
+    """durable=False drops the fsync but the committed file restores fine."""
+    t = _tree()
+    save(str(tmp_path), 6, t, durable=False, pack=True)
+    out, _, step = restore(str(tmp_path), t)
+    assert step == 6
+    np.testing.assert_array_equal(
+        np.asarray(t["params"]["w"]), np.asarray(out["params"]["w"])
+    )
+    assert not any(p.name.endswith(".part") for p in tmp_path.iterdir())
+
+
 def test_leaf_name_sanitization():
     import jax.tree_util as jtu
 

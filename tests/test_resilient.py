@@ -1,0 +1,407 @@
+"""Resilient streaming ingestion (repro/stream/resilient.py): kill-and-resume
+bitwise parity, fault injection, quarantine semantics, per-worker sharded
+resume."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cur.streaming import streaming_cur_init
+from repro.data.synthetic import powerlaw_matrix
+from repro.obs import EVENT_QUARANTINED, MetricsRegistry, set_registry, telemetry_summary
+from repro.spsd.streaming import streaming_spsd_init
+from repro.stream import (
+    ArrayPanelSource,
+    FaultInjector,
+    FaultPlan,
+    InjectedCrash,
+    QuarantineAbort,
+    adaptive_cur_init,
+    run_resilient_sharded_stream,
+    run_resilient_stream,
+    simulate_sharded_stream,
+    stream_panels,
+    with_quarantine,
+    zero_nonfinite_panels,
+)
+
+M, N, PANEL = 96, 144, 16  # 9 whole panels
+NUM_PANELS = N // PANEL
+
+
+@pytest.fixture(scope="module")
+def A():
+    return powerlaw_matrix(jax.random.key(0), M, N, 1.0)
+
+
+@pytest.fixture(scope="module")
+def K():
+    G = powerlaw_matrix(jax.random.key(8), N, 32, 1.0)
+    return G @ G.T + 0.01 * jnp.eye(N)
+
+
+COL = jnp.asarray([3, 40, 99, 120, 7, 31], jnp.int32)
+ROW = jnp.asarray([5, 17, 40, 77, 90, 60], jnp.int32)
+
+
+def _fixed_init():
+    return streaming_cur_init(
+        jax.random.key(1), M, N, COL, ROW, panel=PANEL, telemetry=True
+    )
+
+
+def _adaptive_init():
+    return adaptive_cur_init(
+        jax.random.key(5), M, N, 8, ROW[:4], panel=PANEL, panel_cap=2, telemetry=True
+    )
+
+
+def _spsd_init():
+    return streaming_spsd_init(
+        jax.random.key(9), N, COL[:4], s=48, panel=PANEL, telemetry=True
+    )
+
+
+CONFIGS = {
+    "fixed_cur": (_fixed_init, "A"),
+    "adaptive_cur": (_adaptive_init, "A"),
+    "spsd": (_spsd_init, "K"),
+}
+
+FACTORS = ("C", "R", "M")
+TEL_INT = ("admitted", "evicted", "rows_admitted", "occupancy", "events", "panels_seen")
+
+
+def _operand(name, A, K):
+    return A if name == "A" else K
+
+
+def _assert_states_equal(a, b, *, psi=True):
+    for f in FACTORS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+    for leaf in TEL_INT:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.tel, leaf)), np.asarray(getattr(b.tel, leaf)),
+            err_msg=leaf,
+        )
+    if psi:
+        np.testing.assert_array_equal(np.asarray(a.tel.psi), np.asarray(b.tel.psi))
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume bitwise parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("config", list(CONFIGS))
+@pytest.mark.parametrize("crash_panel", [2, 5, NUM_PANELS - 1], ids=["first", "middle", "last"])
+def test_kill_and_resume_bitwise_parity(config, crash_panel, A, K, tmp_path):
+    """A stream interrupted by an injected crash, resumed from the latest
+    checkpoint in a *separate invocation*, is bitwise-identical — factors and
+    telemetry counters — to the uninterrupted run at the same chunk cadence.
+    Crash placement selects which checkpoint (first / middle / last) the
+    resume replays from."""
+    init, operand = CONFIGS[config]
+    Aop = _operand(operand, A, K)
+    src = ArrayPanelSource(Aop, PANEL)
+    ref, ref_rep = run_resilient_stream(init(), src, chunk_panels=2)
+    assert ref_rep.panels_consumed == NUM_PANELS
+
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=crash_panel))
+    d = str(tmp_path / config)
+    with pytest.raises(InjectedCrash):
+        run_resilient_stream(init(), inj, chunk_panels=2, ckpt_dir=d, ckpt_every=1)
+    st, rep = run_resilient_stream(init(), inj, chunk_panels=2, ckpt_dir=d, ckpt_every=1)
+    # the resume replayed only unconsumed panels, from the newest checkpoint
+    # strictly before the crash point
+    assert rep.resumed_from == (crash_panel // 2) * 2
+    assert rep.panels_consumed == NUM_PANELS
+    _assert_states_equal(ref, st)
+
+
+@pytest.mark.parametrize("config", list(CONFIGS))
+def test_in_process_restart_parity(config, A, K, tmp_path):
+    """Same parity with the restart handled inside one invocation
+    (``max_restarts``) instead of across invocations."""
+    init, operand = CONFIGS[config]
+    src = ArrayPanelSource(_operand(operand, A, K), PANEL)
+    ref, _ = run_resilient_stream(init(), src, chunk_panels=3)
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=7))
+    st, rep = run_resilient_stream(
+        init(), inj, chunk_panels=3, ckpt_dir=str(tmp_path), ckpt_every=1, max_restarts=1
+    )
+    assert rep.restarts == 1
+    _assert_states_equal(ref, st)
+
+
+def test_resume_false_ignores_stale_checkpoints(A, tmp_path):
+    """resume=False treats the directory as write-only: a second drive into
+    a directory holding the first drive's final checkpoint replays the whole
+    stream (instead of restoring-and-no-oping) and still matches the clean
+    run bitwise. In-process restarts only roll back to this drive's saves."""
+    src = ArrayPanelSource(A, PANEL)
+    ref, _ = run_resilient_stream(_fixed_init(), src, chunk_panels=2)
+    d = str(tmp_path)
+    _, rep1 = run_resilient_stream(
+        _fixed_init(), src, chunk_panels=2, ckpt_dir=d, ckpt_every=1
+    )
+    assert rep1.resumed_from is None and rep1.panels_consumed == NUM_PANELS
+    st, rep2 = run_resilient_stream(
+        _fixed_init(), src, chunk_panels=2, ckpt_dir=d, ckpt_every=1, resume=False
+    )
+    assert rep2.resumed_from is None  # did not resume the stale final ckpt
+    assert rep2.panels_consumed == NUM_PANELS
+    _assert_states_equal(ref, st)
+
+    # in-process restart under resume=False still works off this drive's saves
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=6))
+    st2, rep3 = run_resilient_stream(
+        _fixed_init(), inj, chunk_panels=2, ckpt_dir=d, ckpt_every=1,
+        resume=False, max_restarts=1,
+    )
+    assert rep3.restarts == 1
+    _assert_states_equal(ref, st2)
+
+
+def test_crash_without_checkpoint_restarts_from_scratch(A):
+    """No ckpt_dir: an in-process restart replays the whole stream from the
+    pristine initial state — still bitwise-equal (donation never corrupted
+    the template)."""
+    src = ArrayPanelSource(A, PANEL)
+    ref, _ = run_resilient_stream(_fixed_init(), src, chunk_panels=2)
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=6))
+    st, rep = run_resilient_stream(_fixed_init(), inj, chunk_panels=2, max_restarts=1)
+    assert rep.restarts == 1
+    _assert_states_equal(ref, st)
+
+
+def test_resumed_factors_match_per_panel_driver(A, tmp_path):
+    """Cross-driver check: the resumed scan-path factors equal the whole
+    stream driven per panel (C/R/M are cadence- and driver-independent;
+    Ψ association is chunk-cadence-dependent, so it is excluded here)."""
+    src = ArrayPanelSource(A, PANEL)
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=5))
+    d = str(tmp_path)
+    with pytest.raises(InjectedCrash):
+        run_resilient_stream(_fixed_init(), inj, chunk_panels=2, ckpt_dir=d, ckpt_every=1)
+    st, _ = run_resilient_stream(_fixed_init(), inj, chunk_panels=2, ckpt_dir=d, ckpt_every=1)
+    whole = stream_panels(_fixed_init(), A, PANEL, jit="per-panel")
+    for f in FACTORS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st, f)), np.asarray(getattr(whole, f)), err_msg=f
+        )
+    for leaf in TEL_INT:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st.tel, leaf)), np.asarray(getattr(whole.tel, leaf))
+        )
+
+
+def test_restored_state_is_fresh_buffer(A, tmp_path):
+    """Donation contract: a checkpoint restores into fresh buffers, so the
+    same checkpoint can be restored and streamed twice with identical
+    results (a donated restore would invalidate the second run's input)."""
+    from repro.stream import restore_stream_state, save_stream_state
+
+    src = ArrayPanelSource(A, PANEL)
+    st, _ = run_resilient_stream(_fixed_init(), src, chunk_panels=2, stop_panel=4)
+    save_stream_state(str(tmp_path), st, 4)
+    out = []
+    for _ in range(2):
+        restored, cursor, _ = restore_stream_state(str(tmp_path), _fixed_init())
+        assert cursor == 4
+        done, _ = run_resilient_stream(restored, src, chunk_panels=2, start_panel=cursor)
+        out.append(done)
+    _assert_states_equal(out[0], out[1])
+
+
+# ---------------------------------------------------------------------------
+# fault injection: drops, duplicates, stragglers
+# ---------------------------------------------------------------------------
+
+
+def test_drop_duplicate_straggler_do_not_diverge(A):
+    src = ArrayPanelSource(A, PANEL)
+    ref, _ = run_resilient_stream(_fixed_init(), src, chunk_panels=3)
+    inj = FaultInjector(
+        src,
+        FaultPlan(
+            drop_panels=(2,), duplicate_panels=(5,),
+            straggler_panels=(4,), straggler_delay_s=0.001,
+        ),
+    )
+    st, rep = run_resilient_stream(_fixed_init(), inj, chunk_panels=3)
+    assert rep.retries >= 2  # one drop re-read + one stale-tag re-request
+    _assert_states_equal(ref, st)
+
+
+def test_drop_exhausts_retries(A):
+    class AlwaysDrop(ArrayPanelSource):
+        def read_chunk(self, lo, num):
+            from repro.stream import TransientReadError
+
+            raise TransientReadError("flaky source")
+
+    with pytest.raises(Exception, match="flaky|retries"):
+        run_resilient_stream(
+            _fixed_init(), AlwaysDrop(A, PANEL), chunk_panels=2, max_retries=2
+        )
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: quarantine + strict mode
+# ---------------------------------------------------------------------------
+
+
+def test_quarantine_equals_zeroed_panel(A):
+    """The defined semantics: a quarantined panel contributes exactly what an
+    all-zero panel would — C/R/M, telemetry counters and Ψ all match the
+    clean run on the zeroed operand bitwise."""
+    bad_panels = (3, 6)
+    A_zero = A
+    for t in bad_panels:
+        A_zero = A_zero.at[:, t * PANEL : (t + 1) * PANEL].set(0.0)
+    ref, _ = run_resilient_stream(_fixed_init(), ArrayPanelSource(A_zero, PANEL), chunk_panels=2)
+    inj = FaultInjector(ArrayPanelSource(A, PANEL), FaultPlan(corrupt_panels=bad_panels))
+    st, rep = run_resilient_stream(_fixed_init(), inj, chunk_panels=2, quarantine=True)
+    assert rep.quarantined == len(bad_panels)
+    assert int(st.quarantined) == len(bad_panels)
+    for f in FACTORS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(st, f)), err_msg=f
+        )
+    np.testing.assert_array_equal(np.asarray(ref.tel.psi), np.asarray(st.tel.psi))
+    # EVENT_QUARANTINED flags exactly the corrupted panels
+    events = np.asarray(st.tel.events)
+    flagged = set(np.nonzero(events & EVENT_QUARANTINED)[0].tolist())
+    assert flagged == set(bad_panels)
+    summ = telemetry_summary(st)
+    for t in bad_panels:
+        assert "quarantined" in summ["events"][t]
+
+
+def test_quarantine_metrics_counters(A):
+    reg = MetricsRegistry(enabled=True)
+    set_registry(reg)
+    try:
+        inj = FaultInjector(ArrayPanelSource(A, PANEL), FaultPlan(corrupt_panels=(4,)))
+        run_resilient_stream(_fixed_init(), inj, chunk_panels=2, quarantine=True)
+        assert reg.counters.get("stream/resilient/quarantined") == 1
+        inj2 = FaultInjector(
+            ArrayPanelSource(A, PANEL), FaultPlan(crash_at_panel=5, drop_panels=(2,))
+        )
+        run_resilient_stream(_fixed_init(), inj2, chunk_panels=2, max_restarts=1)
+        assert reg.counters.get("stream/resilient/restarts") == 1
+        assert reg.counters.get("stream/resilient/retries") == 1
+    finally:
+        set_registry(MetricsRegistry(enabled=False))
+
+
+def test_strict_mode_aborts_to_last_checkpoint(A, tmp_path):
+    inj = FaultInjector(ArrayPanelSource(A, PANEL), FaultPlan(corrupt_panels=(5,)))
+    with pytest.raises(QuarantineAbort) as exc:
+        run_resilient_stream(
+            _fixed_init(), inj, chunk_panels=1, ckpt_dir=str(tmp_path),
+            ckpt_every=1, strict=True,
+        )
+    e = exc.value
+    # rolled back to the checkpoint at panel 5 — the corrupt panel unconsumed
+    assert e.panels_consumed == 5
+    assert int(e.state.offset) == 5 * PANEL
+    assert int(e.state.quarantined) == 0
+    # the rolled-back state is live: repair the source and finish the stream
+    clean = ArrayPanelSource(A, PANEL)
+    done, _ = run_resilient_stream(
+        e.state, clean, chunk_panels=1, start_panel=e.panels_consumed
+    )
+    ref, _ = run_resilient_stream(_fixed_init(), clean, chunk_panels=1, quarantine=True)
+    _assert_states_equal(ref, done)
+
+
+def test_zero_nonfinite_panels_masks_only_bad_panels(A):
+    blk = A[:, : 4 * PANEL]
+    bad = blk.at[:, PANEL + 3].set(jnp.inf)
+    out = zero_nonfinite_panels(bad, PANEL)
+    np.testing.assert_array_equal(np.asarray(out[:, :PANEL]), np.asarray(blk[:, :PANEL]))
+    np.testing.assert_array_equal(
+        np.asarray(out[:, PANEL : 2 * PANEL]), np.zeros((M, PANEL), np.float32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out[:, 2 * PANEL :]), np.asarray(blk[:, 2 * PANEL :])
+    )
+
+
+def test_quarantine_off_state_unarmed(A):
+    st = stream_panels(_fixed_init(), A, PANEL)
+    assert st.quarantined is None
+    armed = with_quarantine(_fixed_init())
+    assert int(armed.quarantined) == 0
+    assert with_quarantine(armed) is armed  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# distributed resume: per-worker checkpoints
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_workers", [2, 4])
+@pytest.mark.parametrize("config", list(CONFIGS))
+def test_sharded_worker_crash_resume_parity(config, num_workers, A, K, tmp_path):
+    """A single worker crash, resumed from that worker's own checkpoint
+    directory and re-merged, is bitwise-identical to the all-healthy sharded
+    run — which itself matches the per-worker simulate oracle."""
+    init, operand = CONFIGS[config]
+    Aop = _operand(operand, A, K)
+    src = ArrayPanelSource(Aop, PANEL)
+    healthy, _ = run_resilient_sharded_stream(init(), src, num_workers, chunk_panels=2)
+    oracle = simulate_sharded_stream(init(), Aop, PANEL, num_workers, jit="per-panel")
+    for f in FACTORS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(healthy, f)), np.asarray(getattr(oracle, f)), err_msg=f
+        )
+
+    # crash inside some worker's range; one-shot, so the second invocation
+    # resumes that worker from its checkpoint and replays nothing elsewhere
+    d = str(tmp_path / f"{config}_{num_workers}")
+    inj = FaultInjector(src, FaultPlan(crash_at_panel=NUM_PANELS // 2))
+    with pytest.raises(InjectedCrash):
+        run_resilient_sharded_stream(
+            init(), inj, num_workers, ckpt_dir=d, chunk_panels=2, ckpt_every=1
+        )
+    st, reps = run_resilient_sharded_stream(
+        init(), inj, num_workers, ckpt_dir=d, chunk_panels=2, ckpt_every=1
+    )
+    assert any(r.resumed_from is not None for r in reps)
+    _assert_states_equal(healthy, st)
+
+
+def test_sharded_needs_fresh_state(A):
+    st, _ = run_resilient_stream(
+        _fixed_init(), ArrayPanelSource(A, PANEL), chunk_panels=2, stop_panel=2
+    )
+    with pytest.raises(ValueError, match="fresh state"):
+        run_resilient_sharded_stream(st, ArrayPanelSource(A, PANEL), 2)
+
+
+# ---------------------------------------------------------------------------
+# multi-device mesh path (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multidev_resilient_parity():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    script = os.path.join(os.path.dirname(__file__), "multidev_scenario.py")
+    proc = subprocess.run(
+        [sys.executable, script, "resilient"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, f"\nSTDOUT:{proc.stdout[-2000:]}\nSTDERR:{proc.stderr[-3000:]}"
+    assert "OK scenario_resilient_worker_crash" in proc.stdout
