@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-all smoke bench docs-check perf-check obs-check chaos-check
+.PHONY: test test-slow test-all smoke bench docs-check perf-check obs-check chaos-check census-check
 
 test:  ## default tier-1 lane (slow sweeps excluded via pyproject addopts)
 	$(PY) -m pytest -x -q
@@ -30,6 +30,11 @@ perf-check:  ## regenerate the smoke benches and gate vs benchmarks/baselines/
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_spsd.json
 	$(PY) -m benchmarks.serve_bench --smoke --out-dir /tmp/perf-check
 	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_serve.json
+	$(PY) -m benchmarks.sketch_perf --smoke --out-dir /tmp/perf-check
+	$(PY) -m benchmarks.check_regression --fresh /tmp/perf-check/BENCH_kernels.json
+
+census-check:  ## scan-body HLO census: fused >=25% leaner + committed budgets
+	$(PY) tools/census_check.py
 
 obs-check:  ## telemetry acceptance: <=1.3x paired-row overhead + HLO/bitwise identity
 	$(PY) -m benchmarks.stream_bench --smoke --out-dir /tmp/obs-check

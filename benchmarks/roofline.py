@@ -12,6 +12,10 @@ once — verified and documented; both numbers are in the artifacts).
 MODEL_FLOPS = 6·N·T (train), 2·N·T (prefill), 2·N·B (decode step), with
 N = active params for MoE. The useful-compute ratio MODEL_FLOPS/HLO_FLOPs
 exposes remat recompute and attention/dispatch overheads.
+
+Streaming-engine programs get the same treatment live (no artifacts):
+``stream_rows`` compiles the engine's scan fused/unfused, censuses the
+compiled HLO, and reports HBM-bound seconds per panel on the v5e numbers.
 """
 
 from __future__ import annotations
@@ -110,8 +114,51 @@ def build_table(mesh: str = "16x16", tag: str = "") -> str:
     return "\n".join(lines)
 
 
-def run(trials: int = 1, quick: bool = False) -> list:
+def stream_rows(quick: bool = False) -> list:
+    """Roofline rows for compiled streaming-engine programs (live census).
+
+    Compiles the engine's ``scan_chunk`` fused and unfused on a reference
+    config, runs the loop-aware HLO census on each program, and converts
+    bytes-per-panel into the memory roofline term (the streaming engine is
+    HBM-bound by construction — there is no collective term and the flop
+    term is negligible at these panel shapes). The fused/unfused pair puts
+    the scan-body traffic win of the fused route on the same axis as the
+    dry-run rooflines above.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cur.streaming import streaming_cur_init
+    from repro.launch.hlo_census import census_stream_program
+
+    m, n, panel, c, r = (512, 512, 128, 16, 16)
+    st = streaming_cur_init(
+        jax.random.PRNGKey(0), m, n,
+        col_idx=jnp.arange(c, dtype=jnp.int32),
+        row_idx=jnp.arange(r, dtype=jnp.int32),
+        sketch="countsketch", panel=panel,
+    )
+    A = jnp.zeros((m, n), jnp.float32)
     rows = []
+    for fused in (True, False) if not quick else (True,):
+        cen = census_stream_program(st, A, panel, fused=fused)
+        mem_s = cen["bytes_per_panel"] / HBM_BW
+        body_s = cen["scan_body_bytes_per_panel"] / HBM_BW
+        rows.append({
+            "name": f"roofline/stream/cur_{m}x{n}_p{panel}/{'fused' if fused else 'unfused'}",
+            "us_per_call": round(mem_s * 1e6, 3),  # HBM-bound time per panel
+            "derived": (
+                f"dominant=memory;memory_s={mem_s:.3e};scan_body_memory_s={body_s:.3e};"
+                f"bytes_per_panel={cen['bytes_per_panel']:.3e};"
+                f"scan_body_bytes_per_panel={cen['scan_body_bytes_per_panel']:.3e};"
+                f"n_ops={cen['n_ops']:.0f}"
+            ),
+        })
+    return rows
+
+
+def run(trials: int = 1, quick: bool = False) -> list:
+    rows = stream_rows(quick)
     shapes = _shapes()
     for mesh in ("16x16", "2x16x16"):
         for r in load_records(mesh):

@@ -89,11 +89,34 @@ def _cur_r_block(ctx: CURStreamCtx, A_L, off):
     return jnp.take(A_L, ctx.row_idx, axis=0)  # (r, L)
 
 
+def _cur_chunk_fold(ctx: CURStreamCtx, C, R, block, bcol0, start, width):
+    """Fused-scan hook: the whole chunk's C/R writes in one pass.
+
+    Fixed indices make every panel's factor write a pure copy of ``A``
+    entries, so the per-panel loop is unnecessary: the selected columns
+    falling inside ``[start, start+width)`` are gathered once into their C
+    slots, and the selected rows' chunk stripe lands in ``R`` with one
+    window write — bitwise the values the per-panel path copies.
+    """
+    rel = ctx.col_idx - start
+    in_chunk = (rel >= 0) & (rel < width)
+    picked = jnp.take(block, bcol0 + jnp.clip(rel, 0, width - 1), axis=1)
+    C = jnp.where(in_chunk[None, :], picked.astype(C.dtype), C)
+    stripe = jax.lax.dynamic_slice_in_dim(
+        jnp.take(block, ctx.row_idx, axis=0), bcol0, width, axis=1
+    )
+    R = jax.lax.dynamic_update_slice_in_dim(
+        R, stripe.astype(R.dtype), start, axis=1
+    )
+    return ctx, C, R
+
+
 STREAMING_CUR_OPS = PanelOps(
     name="streaming_cur",
     core_sketches=_cur_core_sketches,
     update_c=_cur_update_c,
     r_block=_cur_r_block,
+    chunk_fold=_cur_chunk_fold,
 )
 
 # Telemetered twin — same hooks plus the fixed-index diagnostics fold; one

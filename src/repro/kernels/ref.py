@@ -32,3 +32,52 @@ def panel_score_ref(sc: jax.Array, a_l: jax.Array, q: jax.Array) -> tuple:
     t = q.astype(dt).T @ sc_a  # (c, L)
     resid2 = jnp.maximum(energy - jnp.sum(t * t, axis=0), 0.0)
     return sc_a, resid2, energy
+
+
+def panel_update_ref(
+    sc: jax.Array,
+    a_l: jax.Array,
+    srt: jax.Array,
+    q: jax.Array,
+    C: jax.Array,
+    M: jax.Array,
+    *,
+    min_gain,
+    run_mean,
+    true_cols,
+    n_filled,
+    free,
+    panel_cap: int,
+) -> tuple:
+    """Unfused oracle for the fused panel-update megakernel.
+
+    The exact admission-only panel update of
+    :mod:`repro.stream.adaptive`, as the separate XLA ops the megakernel
+    replaces: score (three ``sc_a`` round-trips), threshold, stable
+    ``top_k`` + cumsum slot assignment, scatter into ``C``, and the
+    ``M += sc_a · S_Rᵀ|window`` fold. Returns
+    ``(C', M', sc_a, resid2, energy, slots)`` with ``slots[j]`` the C slot
+    column ``j`` was admitted into or the ``C.shape[1]`` sentinel.
+    """
+    sc_a, resid2, energy = panel_score_ref(sc, a_l, q)
+    L = a_l.shape[1]
+    c_total = C.shape[1]
+    panel_mean = jnp.sum(energy) / true_cols
+    thresh = min_gain * jnp.maximum(run_mean, panel_mean)
+    eligible = resid2 > thresh
+    K = min(panel_cap, L)
+    cand_res, cand = jax.lax.top_k(jnp.where(eligible, resid2, -1.0), K)
+    cand_ok = jnp.take(eligible, cand)
+    ranks = jnp.cumsum(cand_ok.astype(jnp.int32)) - 1
+    admit = cand_ok & (ranks < free)
+    cand_slots = jnp.where(admit, n_filled + ranks, c_total)
+    C = C.at[:, cand_slots].set(
+        jnp.take(a_l, cand, axis=1).astype(C.dtype), mode="drop"
+    )
+    # admitted slots back in panel-column order; non-admitted candidates
+    # write the sentinel they already hold (cand indices are distinct)
+    slots = jnp.full((L,), c_total, jnp.int32).at[cand].set(
+        cand_slots.astype(jnp.int32)
+    )
+    M = M + (sc_a @ srt.astype(jnp.float32)).astype(M.dtype)
+    return C, M, sc_a, resid2, energy, slots

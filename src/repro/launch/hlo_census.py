@@ -14,9 +14,19 @@ the product of enclosing trip counts. It reports:
   * hbm_bytes    — Σ (result + operand bytes) of top-level instructions
                    (fusion internals excluded: values inside a fusion never
                    round-trip through HBM)
+  * n_ops        — weighted count of *real* top-level instructions (pure
+                   bookkeeping — parameter/constant/tuple/gte/bitcast/
+                   reshape — excluded): a dispatch-overhead proxy that a
+                   fused scan body should shrink alongside its traffic
   * collectives  — per-op count / result bytes / ring-algorithm wire bytes
 
 All numbers are per-device (the SPMD module is the per-device program).
+
+:func:`stream_scan_hlo` / :func:`census_stream_program` extend the census
+to arbitrary compiled *streaming* programs: they lower the engine's
+``scan_chunk`` / ``scan_panels`` for a given state and operand, so the
+fused-vs-unfused scan bodies become comparable committed numbers
+(HBM bytes per panel; gated by ``tools/census_check.py``).
 """
 
 from __future__ import annotations
@@ -248,7 +258,10 @@ def _fusion_traffic(ins: Instruction, type_of: Dict[str, str], comps: Dict[str, 
     def op_list(body: str):
         return _OPERANDS.findall(body[body.find("(") :]) if "(" in body else []
 
-    # classify every fusion parameter by how it is consumed
+    # classify every fusion parameter by how it is consumed — per use, so a
+    # carry buffer that is dynamic-sliced AND the aliased root-DUS target
+    # (XLA CPU's serial scatter lowering: read row, add, write row back)
+    # charges only the sliced rows, not the whole accumulator per trip
     reads = 0.0
     for pname, oname in zip(param_names, operand_names):
         uses = []
@@ -258,14 +271,19 @@ def _fusion_traffic(ins: Instruction, type_of: Dict[str, str], comps: Dict[str, 
         full = _op_shape_bytes(oname, type_of) or result_bytes_of(pname)
         if not uses:
             continue
-        if all(u.kind == "dynamic-slice" for u in uses):
-            reads += sum(result_bytes_of(u.name) for u in uses)
-        elif all(
-            u.kind == "dynamic-update-slice" and op_list(u.body)[0] == pname for u in uses
-        ):
-            reads += 0.0  # aliased in-place carry buffer
-        else:
-            reads += full
+        sliced = 0.0
+        fallback = False
+        for u in uses:
+            if u.kind == "dynamic-slice":
+                sliced += result_bytes_of(u.name)
+            elif u.kind == "gather" and op_list(u.body)[0] == pname:
+                # sparse read: a k-column/row gather touches ~result bytes
+                sliced += result_bytes_of(u.name)
+            elif u.kind == "dynamic-update-slice" and op_list(u.body)[0] == pname:
+                pass  # aliased in-place carry buffer: reads nothing
+            else:
+                fallback = True
+        reads += full if fallback else sliced
 
     # writes: root DUS (possibly behind bitcast / in a tuple) writes updates only
     def write_bytes(rname: str, depth=0) -> float:
@@ -324,16 +342,20 @@ def _instr_traffic(ins: Instruction, type_of: Dict[str, str], comps: Optional[Di
     return 0.0
 
 
-def census(hlo: str) -> dict:
+def census(hlo: str, entry: Optional[str] = None) -> dict:
+    """Loop-aware census of ``hlo``. ``entry`` overrides the root computation
+    (default: the module's ENTRY) — pass a while-loop *body* to census one
+    iteration of that loop (e.g. one panel of a streaming scan)."""
     comps = parse_computations(hlo)
-    entry_name = None
-    for raw in hlo.splitlines():
-        s = raw.strip()
-        if s.startswith("ENTRY"):
-            m = _COMP_HEADER.match(s)
-            if m:
-                entry_name = m.group(1)
-                break
+    entry_name = entry
+    if entry_name is None:
+        for raw in hlo.splitlines():
+            s = raw.strip()
+            if s.startswith("ENTRY"):
+                m = _COMP_HEADER.match(s)
+                if m:
+                    entry_name = m.group(1)
+                    break
     if entry_name is None or entry_name not in comps:
         # fall back: the computation with the most instructions
         entry_name = max(comps, key=lambda c: len(comps[c].instructions))
@@ -366,8 +388,11 @@ def census(hlo: str) -> dict:
 
     flops = 0.0
     hbm_bytes = 0.0
+    n_ops = 0.0
     colls = defaultdict(lambda: {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
     trip_info = []
+    _BOOKKEEPING = ("parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "reshape")
 
     for cname, comp in comps.items():
         w = weights.get(cname, 0.0)
@@ -394,6 +419,8 @@ def census(hlo: str) -> dict:
                 colls[ins.kind]["wire_bytes"] += w * rb * _wire_factor(ins.kind, max(g, 1))
             if not comp.is_fusion:
                 hbm_bytes += w * _instr_traffic(ins, type_of, comps)
+                if ins.kind not in _BOOKKEEPING:
+                    n_ops += w
 
     # record while trip counts for transparency
     for cname, comp in comps.items():
@@ -408,7 +435,104 @@ def census(hlo: str) -> dict:
     return {
         "flops": flops,
         "hbm_bytes": hbm_bytes,
+        "n_ops": n_ops,
         "collectives": {k: dict(v) for k, v in colls.items()},
         "while_trip_counts": trip_info,
         "n_computations": len(comps),
     }
+
+
+# ---------------------------------------------------------------------------
+# streaming-program census (scan_chunk / scan_panels)
+# ---------------------------------------------------------------------------
+
+
+def stream_scan_hlo(state, A, panel: int, *, fused: bool = True, route: str = "chunk") -> str:
+    """Compiled HLO text of one streaming scan program over ``A``.
+
+    Lowers the engine's jitted scan for the given state — ``route="chunk"``
+    compiles :func:`repro.stream.engine.scan_chunk` on a chunk-shaped
+    operand (``A``'s width must be whole panels), ``route="panels"``
+    compiles :func:`repro.stream.engine.scan_panels` on the full stream
+    operand. ``fused`` selects the fused scan body vs the legacy per-panel
+    body — the pair the census compares. Lazy imports keep this module
+    importable without the streaming stack.
+    """
+    import jax  # deferred: the census parser itself is dependency-free
+
+    from ..stream import engine
+
+    if route == "panels":
+        num_panels = A.shape[1] // panel
+        lowered = jax.jit(
+            engine.scan_panels, static_argnames=("num_panels", "panel", "fused")
+        ).lower(state, A, num_panels=num_panels, panel=panel, fused=fused)
+    elif route == "chunk":
+        if A.shape[1] % panel:
+            raise ValueError(
+                f"chunk width {A.shape[1]} must be whole panels of {panel}"
+            )
+        lowered = jax.jit(engine.scan_chunk, static_argnames=("panel", "fused")).lower(
+            state, A, panel=panel, fused=fused
+        )
+    else:
+        raise ValueError(f"route must be 'chunk' or 'panels', got {route!r}")
+    return lowered.compile().as_text()
+
+
+def scan_body_computation(hlo: str, num_panels: int) -> Optional[str]:
+    """Name of the scan's while-*body* computation: the while loop whose
+    analyzed trip count equals ``num_panels`` (ties broken by body size —
+    nested helper loops of the same trip count are smaller)."""
+    comps = parse_computations(hlo)
+    best = None
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.kind != "while":
+                continue
+            cond = _COND.findall(ins.body)
+            trip = _trip_count(ins.body, comps.get(cond[0]) if cond else None)
+            if trip != num_panels:
+                continue
+            bodies = _CALLS.findall(ins.body)
+            if bodies and bodies[0] in comps:
+                cand = bodies[0]
+                if best is None or len(comps[cand].instructions) > len(comps[best].instructions):
+                    best = cand
+    return best
+
+
+def census_stream_program(
+    state, A, panel: int, *, fused: bool = True, route: str = "chunk"
+) -> dict:
+    """Loop-aware census of one compiled streaming scan, per-panel normalized.
+
+    Returns the :func:`census` dict plus:
+
+      * ``num_panels``
+      * ``bytes_per_panel``  — whole-program hbm_bytes / num_panels (the
+        amortized cost including any chunk-hoisted prologue work)
+      * ``scan_body_bytes_per_panel`` / ``scan_body_n_ops`` — the census of
+        ONE iteration of the scan's while body: the steady-state marginal
+        traffic per panel. This is where the fused body's win shows up —
+        the hoisted chunk sketch leaves the loop entirely — and the number
+        the ≥25 % fused-vs-unfused regression gate is on.
+
+    Committed in ``benchmarks/baselines/census_budget.json`` and gated by
+    ``make census-check``.
+    """
+    num_panels = A.shape[1] // panel
+    hlo = stream_scan_hlo(state, A, panel, fused=fused, route=route)
+    c = census(hlo)
+    c["num_panels"] = num_panels
+    c["bytes_per_panel"] = c["hbm_bytes"] / max(num_panels, 1)
+    body = scan_body_computation(hlo, num_panels)
+    if body is not None:
+        bc = census(hlo, entry=body)
+        c["scan_body_bytes_per_panel"] = bc["hbm_bytes"]
+        c["scan_body_n_ops"] = bc["n_ops"]
+    else:  # degenerate single-panel program: the whole module is the body
+        c["scan_body_bytes_per_panel"] = c["bytes_per_panel"]
+        c["scan_body_n_ops"] = c["n_ops"]
+    c["fused"] = fused
+    return c

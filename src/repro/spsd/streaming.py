@@ -57,10 +57,14 @@ from ..stream.adaptive import (
     AdaptiveCURCtx,
     _bind_shard,
     _collective_ctx,
+    _chunk_fold,
     _core_sketches,
+    _fused_step,
     _merge_ctx,
+    _panel_kernel,
     _prep_shard,
     _sketch_panel,
+    _supports_fused,
     _update_c,
 )
 from ..stream.engine import (
@@ -113,10 +117,22 @@ def _spsd_update_c(ctx: SPSDStreamCtx, C, K_L, sc_a, off):
     return ctx, copy_selected_columns(ctx.col_idx, C, K_L, off)
 
 
+def _spsd_chunk_fold(ctx: SPSDStreamCtx, C, R, block, bcol0, start, width):
+    """Fused-scan hook: the whole chunk's fixed-index C copies in one gather
+    (the symmetric half of :func:`repro.cur.streaming._cur_chunk_fold` — no
+    R side, ``R = Cᵀ`` is derived)."""
+    rel = ctx.col_idx - start
+    in_chunk = (rel >= 0) & (rel < width)
+    picked = jnp.take(block, bcol0 + jnp.clip(rel, 0, width - 1), axis=1)
+    C = jnp.where(in_chunk[None, :], picked.astype(C.dtype), C)
+    return ctx, C, R
+
+
 STREAMING_SPSD_OPS = PanelOps(
     name="streaming_spsd",
     core_sketches=_spsd_core_sketches,
     update_c=_spsd_update_c,
+    chunk_fold=_spsd_chunk_fold,
     symmetric=True,
 )
 
@@ -124,8 +140,10 @@ STREAMING_SPSD_OPS = PanelOps(
 # Adaptive in-stream column admission over kernel columns: the column half
 # of the adaptive-CUR policy applies verbatim (scores are computed from the
 # sketches alone; ``rows=None`` disables the row machinery), with the
-# symmetric engine skipping the R half. The disjoint-slot sharding hooks
-# come along for free.
+# symmetric engine skipping the R half. The disjoint-slot sharding hooks —
+# and both fused routes (the hoisted-sketch scan body and the Route-B
+# panel-update megakernel; the (0,)-row ``row_idx`` makes the R stripe of
+# the shared ``_chunk_fold`` a no-op) — come along for free.
 ADAPTIVE_SPSD_OPS = PanelOps(
     name="adaptive_spsd",
     core_sketches=_core_sketches,
@@ -135,6 +153,10 @@ ADAPTIVE_SPSD_OPS = PanelOps(
     bind_shard=_bind_shard,
     merge_ctx=_merge_ctx,
     collective_ctx=_collective_ctx,
+    chunk_fold=_chunk_fold,
+    fused_step=_fused_step,
+    supports_fused=_supports_fused,
+    panel_kernel=_panel_kernel,
     symmetric=True,
 )
 

@@ -94,7 +94,8 @@ import jax.numpy as jnp
 
 from ..core.gmr import fast_gmr_core
 from ..core.sketching import GaussianSketch, draw_sketch
-from ..kernels.ops import panel_score
+from ..kernels.ops import kernel_route_enabled, panel_score
+from ..kernels.ops import panel_update as kernel_panel_update
 from ..obs.telemetry import adaptive_stream_telemetry, init_telemetry
 from .engine import PanelOps, PanelState, fresh_pytree, padded_n, truncated_R
 
@@ -285,6 +286,23 @@ def _whitened_basis(mat: jax.Array) -> jax.Array:
     return jax.scipy.linalg.solve_triangular(L, M.T, lower=True).T
 
 
+def _admitted_basis(ctx: AdaptiveCURCtx) -> jax.Array:
+    """Whitened basis of this worker's admitted-slot sketches (per panel —
+    every admission changes the span the next panel scores against)."""
+    ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
+    return _whitened_basis(ScC_local)
+
+
+def _score_columns(Qm: jax.Array, sc_a: jax.Array) -> tuple:
+    """Per-column ``(resid2, energy)`` of the panel sketches against the
+    whitened admitted basis ``Qm`` — the XLA half of the scoring triple."""
+    y = sc_a.astype(jnp.float32)
+    energy = jnp.sum(y * y, axis=0)  # (L,)
+    t = Qm.T @ y  # (c_local, L)
+    resid2 = jnp.maximum(energy - jnp.sum(t * t, axis=0), 0.0)
+    return resid2, energy
+
+
 def _sketch_panel(ctx: AdaptiveCURCtx, A_L, off):
     """Engine ``sketch_panel`` hook: panel sketch + column scores, fused.
 
@@ -297,16 +315,12 @@ def _sketch_panel(ctx: AdaptiveCURCtx, A_L, off):
     the (s_c × c_local) admitted-sketch slice happens outside the kernel —
     it is O(s_c·c²), independent of the panel.
     """
-    ScC_local = jax.lax.dynamic_slice_in_dim(ctx.ScC, ctx.slot_lo, ctx.c_local, axis=1)
-    Qm = _whitened_basis(ScC_local)
+    Qm = _admitted_basis(ctx)
     if jax.default_backend() == "tpu" and isinstance(ctx.S_C, GaussianSketch):
         sc_a, resid2, energy = panel_score(ctx.S_C.mat[:, : A_L.shape[0]], A_L, Qm)
     else:
         sc_a = ctx.S_C.apply(A_L)  # (s_c, L)
-        y = sc_a.astype(jnp.float32)
-        energy = jnp.sum(y * y, axis=0)  # (L,)
-        t = Qm.T @ y  # (c_local, L)
-        resid2 = jnp.maximum(energy - jnp.sum(t * t, axis=0), 0.0)
+        resid2, energy = _score_columns(Qm, sc_a)
     return ctx, sc_a, (resid2, energy)
 
 
@@ -315,7 +329,7 @@ def _sketch_panel(ctx: AdaptiveCURCtx, A_L, off):
 # ---------------------------------------------------------------------------
 
 
-def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, A_L, sc_a, resid2, eligible, off):
+def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, block, col0, sc_a, resid2, eligible, off):
     """Greedy per-candidate pass over the top-``panel_cap`` residual columns:
     admit into the next free slot while the worker's range has one, else
     evict the weakest admitted slot when the candidate clears ``swap_gain ×``
@@ -324,15 +338,20 @@ def _admit_or_evict_columns(ctx: AdaptiveCURCtx, C, A_L, sc_a, resid2, eligible,
     changes the slot table the next one sees); admission-only
     (``ctx.evict`` False) is order-independent within a panel, so it
     compiles to **one** batched scatter per buffer, identical outcome. All
-    shapes stay static via ``mode='drop'`` OOB scatters."""
-    L = A_L.shape[1]
+    shapes stay static via ``mode='drop'`` OOB scatters.
+
+    The panel's columns live at ``block[:, col0 + j]`` (``col0`` may be
+    traced) — the per-panel driver passes ``(A_L, 0)``, the fused scan body
+    the un-copied chunk operand, so candidate gathers never materialize the
+    (m × L) panel slice."""
+    L = sc_a.shape[1]
     c_total = C.shape[1]
     K = min(ctx.panel_cap, L)
 
     # top-K eligible residual columns, best first (resid2 ≥ 0 > −1 mask)
     cand_res, cand = jax.lax.top_k(jnp.where(eligible, resid2, -1.0), K)
     cand_ok = jnp.take(eligible, cand)
-    cand_A = jnp.take(A_L, cand, axis=1)  # (m, K)
+    cand_A = jnp.take(block, col0 + cand, axis=1)  # (m, K)
     cand_sc = jnp.take(sc_a, cand, axis=1)  # (s_c, K)
 
     if not ctx.evict:
@@ -470,32 +489,40 @@ def _admit_rows(ctx: AdaptiveCURCtx, A_L, off):
     return dataclasses.replace(ctx, row_idx=row_idx, rows=rows)
 
 
-def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off, scores):
-    """Engine hook: admit/evict this panel's columns within this worker's
-    slot range using the scores pre-computed by the fused ``sketch_panel``
-    pass; when rows are adaptive, fold the panel into the row accumulator
-    and admit rows too."""
-    L = A_L.shape[1]
-    resid2, col_energy = scores  # (L,), (L,) — see _sketch_panel
+def _score_and_admit(ctx: AdaptiveCURCtx, C, block, col0, sc_a, resid2, col_energy, off):
+    """Shared per-panel column policy: threshold, admit/evict, fold the
+    energy bookkeeping — the core of ``_update_c`` and ``_fused_step``.
 
-    # Admission threshold: min_gain × the mean column energy, where the mean
-    # is the larger of the running stream mean and the current panel's mean
-    # (over true, unpadded columns). The panel term matters on each worker's
-    # first panels — with a 0 running mean every noise column would otherwise
-    # be "eligible" and greedily exhaust the slot budget before any heavy
-    # column arrives.
+    Admission threshold: min_gain × the mean column energy, where the mean
+    is the larger of the running stream mean and the current panel's mean
+    (over true, unpadded columns). The panel term matters on each worker's
+    first panels — with a 0 running mean every noise column would otherwise
+    be "eligible" and greedily exhaust the slot budget before any heavy
+    column arrives.
+    """
+    L = sc_a.shape[1]
     true_cols = jnp.clip(ctx.n - off, 1, L).astype(jnp.float32)
     panel_mean = jnp.sum(col_energy) / true_cols
     run_mean = ctx.energy / jnp.maximum(ctx.cols_seen, 1.0)
     thresh = ctx.min_gain * jnp.maximum(run_mean, panel_mean)
     eligible = resid2 > thresh  # strict: zero-padded tail columns never pass
 
-    ctx, C = _admit_or_evict_columns(ctx, C, A_L, sc_a, resid2, eligible, off)
+    ctx, C = _admit_or_evict_columns(ctx, C, block, col0, sc_a, resid2, eligible, off)
     ctx = dataclasses.replace(
         ctx,
         energy=ctx.energy + jnp.sum(col_energy),
         cols_seen=ctx.cols_seen + jnp.clip(ctx.n - off, 0, L).astype(ctx.cols_seen.dtype),
     )
+    return ctx, C
+
+
+def _update_c(ctx: AdaptiveCURCtx, C, A_L, sc_a, off, scores):
+    """Engine hook: admit/evict this panel's columns within this worker's
+    slot range using the scores pre-computed by the fused ``sketch_panel``
+    pass; when rows are adaptive, fold the panel into the row accumulator
+    and admit rows too."""
+    resid2, col_energy = scores  # (L,), (L,) — see _sketch_panel
+    ctx, C = _score_and_admit(ctx, C, A_L, 0, sc_a, resid2, col_energy, off)
     if ctx.rows is not None:
         ctx = _admit_rows(ctx, A_L, off)
     return ctx, C
@@ -533,6 +560,104 @@ def _update_r(ctx: AdaptiveCURCtx, R, A_L, off):
         return jnp.where(keep, Xb.astype(R.dtype), R)
 
     return jax.lax.cond(jnp.any(fresh), do_backfill, lambda R: R, R)
+
+
+# ---------------------------------------------------------------------------
+# fused-scan hooks (Route A) and the panel-update megakernel (Route B)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_fold(ctx: AdaptiveCURCtx, C, R, block, bcol0, start, width):
+    """Fused-scan hook: the whole chunk's fixed-row ``R`` stripe in one pass.
+
+    Adaptive *columns* are inherently per-panel (each admission changes the
+    basis the next panel scores against) and stay in ``_fused_step``; the
+    fixed ``row_idx`` side is panel-invariant, so the chunk's row stripe is
+    gathered once — bitwise the values the per-panel ``_update_r`` copies.
+    Adaptive rows never reach here (``_supports_fused`` keeps them on the
+    legacy body).
+    """
+    stripe = jnp.take(block, jnp.clip(ctx.row_idx, 0), axis=0)
+    stripe = jnp.where((ctx.row_idx >= 0)[:, None], stripe, jnp.zeros((), stripe.dtype))
+    stripe = jax.lax.dynamic_slice_in_dim(stripe, bcol0, width, axis=1)
+    R = jax.lax.dynamic_update_slice_in_dim(R, stripe.astype(R.dtype), start, axis=1)
+    return ctx, C, R
+
+
+def _fused_step(ctx: AdaptiveCURCtx, C, block, bcol, sc_a, off):
+    """Engine ``fused_step`` hook: score the pre-sliced panel sketch against
+    the current admitted basis and run the admission/eviction policy,
+    gathering candidate columns straight from the un-copied chunk operand
+    (``block[:, bcol + j]``) — the per-panel (m × L) ``A_L`` slice the fused
+    body exists to remove. Decision-for-decision (and bitwise, for
+    column-independent sketch families) equal to the per-panel oracle."""
+    Qm = _admitted_basis(ctx)
+    resid2, col_energy = _score_columns(Qm, sc_a)
+    ctx, C = _score_and_admit(ctx, C, block, bcol, sc_a, resid2, col_energy, off)
+    return ctx, C, (resid2, col_energy)
+
+
+def _kernel_ok(ctx: AdaptiveCURCtx) -> bool:
+    """Static (trace-time) gate for the Route-B megakernel: TPU backend (or
+    the forced test route), admission-only columns, fixed rows, and dense
+    gaussian core sketches on both sides (the kernel contracts ``S_C.mat``
+    and a dynamic window of ``S_R.mat`` directly)."""
+    return (
+        kernel_route_enabled()
+        and not ctx.evict
+        and ctx.rows is None
+        and isinstance(ctx.S_C, GaussianSketch)
+        and isinstance(ctx.S_R, GaussianSketch)
+    )
+
+
+def _supports_fused(ctx: AdaptiveCURCtx) -> bool:
+    """Route-A gate: adaptive rows are per-panel by construction (the row
+    accumulator + backfill chain can't be hoisted), and when the megakernel
+    route is live the scan keeps the legacy per-panel body so Route B fires
+    every panel instead."""
+    return ctx.rows is None and not _kernel_ok(ctx)
+
+
+def _panel_kernel(ctx: AdaptiveCURCtx, C, M, A_L, off):
+    """Engine ``panel_kernel`` hook (Route B): one fused Pallas launch for
+    the sketch, scoring, admission decision, ``C`` scatter and ``M`` fold
+    (:func:`repro.kernels.ops.panel_update` — C/M aliased in place, ``sc_a``
+    never round-trips HBM). Returns ``None`` at trace time when the config
+    is outside the kernel's contract; the engine then runs the standard
+    path. The whitening and the ctx slot-table scatters stay outside — they
+    are O(s_c·c²) / O(s_c·L), independent of ``m``."""
+    if not _kernel_ok(ctx):
+        return None
+    L = A_L.shape[1]
+    c_total = C.shape[1]
+    Qm = _admitted_basis(ctx)
+    # S_R window for the M fold: M += sc_a @ S_R[:, off:off+L]ᵀ
+    srt = jax.lax.dynamic_slice_in_dim(ctx.S_R.mat, off, L, axis=1).T  # (L, s_r)
+    run_mean = ctx.energy / jnp.maximum(ctx.cols_seen, 1.0)
+    true_cols = jnp.clip(ctx.n - off, 1, L).astype(jnp.float32)
+    free = ctx.slot_lo + ctx.c_local - ctx.n_filled
+    C, M, sc_a, resid2, energy, slots = kernel_panel_update(
+        ctx.S_C.mat[:, : A_L.shape[0]], A_L, srt, Qm, C, M,
+        min_gain=ctx.min_gain, run_mean=run_mean, true_cols=true_cols,
+        n_filled=ctx.n_filled, free=free, panel_cap=ctx.panel_cap,
+    )
+    # slot-table bookkeeping: slots[j] is the C slot column j was admitted
+    # into, or the c_total sentinel (OOB → scatter dropped)
+    ctx = dataclasses.replace(
+        ctx,
+        ScC=ctx.ScC.at[:, slots].set(sc_a.astype(ctx.ScC.dtype), mode="drop"),
+        col_idx=ctx.col_idx.at[slots].set(
+            (off + jnp.arange(L)).astype(jnp.int32), mode="drop"
+        ),
+        slot_score=ctx.slot_score.at[slots].set(
+            resid2.astype(ctx.slot_score.dtype), mode="drop"
+        ),
+        n_filled=ctx.n_filled + jnp.sum(slots < c_total).astype(jnp.int32),
+        energy=ctx.energy + jnp.sum(energy),
+        cols_seen=ctx.cols_seen + jnp.clip(ctx.n - off, 0, L).astype(ctx.cols_seen.dtype),
+    )
+    return ctx, C, M, sc_a, (resid2, energy)
 
 
 # ---------------------------------------------------------------------------
@@ -701,6 +826,10 @@ ADAPTIVE_CUR_OPS = PanelOps(
     merge_ctx=_merge_ctx,
     collective_ctx=_collective_ctx,
     merge_state=_merge_state,
+    chunk_fold=_chunk_fold,
+    fused_step=_fused_step,
+    supports_fused=_supports_fused,
+    panel_kernel=_panel_kernel,
 )
 
 # Telemetered twin of ADAPTIVE_CUR_OPS — same hooks plus the per-panel

@@ -159,8 +159,45 @@ class PanelOps:
     # telemetry frame (state.tel is not None), and may only derive
     # diagnostics — factors are bit-identical with telemetry on or off, and
     # an untelemetered state (tel=None contributes no pytree leaves)
-    # compiles to the identical scan program.
+    # compiles to the identical scan program. Contract: the hook may read
+    # A_L's static shape only, never its values — the fused scan route
+    # passes a (0, panel) placeholder so the panel is not re-sliced.
     telemetry: Optional[Callable] = None
+    # --- fused scan-body hooks (Route A — see scan_chunk/scan_panels) -----
+    # Declaring chunk_fold opts the ops into the fused scan body: the
+    # engine hoists the chunk sketch sca = S_C.apply(window) out of the
+    # scan, runs chunk_fold ONCE per chunk for all whole-chunk work, and
+    # the per-panel body shrinks to slicing sc_a out of sca + the M fold +
+    # fused_step. The per-panel driver (panel_update) stays the parity
+    # oracle; a fused ops must produce factors matching it to the scan
+    # parity tolerances (bitwise where those tests demand it).
+    #
+    # chunk_fold(ctx, C, R, block, bcol0, start, width) -> (ctx', C', R'):
+    # fold everything panel-invariant over the whole chunk in one pass —
+    # fixed-index C column copies, fixed-row R gather + one window write.
+    # ``block`` columns [bcol0, bcol0+width) are the chunk's global columns
+    # [start, start+width); bcol0/start may be traced.
+    chunk_fold: Optional[Callable] = None
+    # fused_step(ctx, C, block, bcol, sc_a, off) -> (ctx', C', scores):
+    # the genuinely per-panel remainder (adaptive admission/eviction).
+    # ``sc_a`` is the pre-sliced panel sketch; candidate columns must be
+    # gathered from ``block`` at column ``bcol`` (+ the in-panel index)
+    # instead of materializing A_L — that slice is the traffic the fused
+    # body removes. None ⇒ no per-panel C/ctx work (fixed-index ops).
+    fused_step: Optional[Callable] = None
+    # supports_fused(ctx) -> bool — static (trace-time) predicate gating
+    # the fused route per state; None ⇒ always. Used to keep configs whose
+    # per-panel work cannot be hoisted (e.g. adaptive row admission) on the
+    # legacy body.
+    supports_fused: Optional[Callable] = None
+    # --- Pallas megakernel hook (Route B — see kernels.panel_update) ------
+    # panel_kernel(ctx, C, M, A_L, off) -> None | (ctx', C', M', sc_a,
+    # scores). Tried FIRST by panel_update: when the hook accepts (TPU
+    # backend or a forced test route, kernel-compatible sketches/config) it
+    # replaces the sketch + M fold + update_c with one fused kernel launch;
+    # returning None at trace time declines and the standard path runs.
+    # R-side and telemetry handling are unchanged around it.
+    panel_kernel: Optional[Callable] = None
     # Tied-operand (symmetric) stream: the row factor is R = Cᵀ by
     # definition (SPSD / kernel matrices), so the engine skips the R half of
     # every panel update and `truncated_R` derives R from C. Symmetric ops
@@ -318,19 +355,27 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
         A_L = jnp.where(bad, jnp.zeros((), A_L.dtype), A_L)
         quarantined = quarantined + bad.astype(jnp.int32)
 
-    S_C, S_R = ops.core_sketches(state.ctx)
-    if ops.sketch_panel is not None:
-        # fused path: the application computes sc_a together with its
-        # per-column scores (one pass; see kernels.panel_score on TPU)
-        ctx, sc_a, scores = ops.sketch_panel(state.ctx, A_L, off)
+    fast = None
+    if ops.panel_kernel is not None:
+        # Route B: one fused Pallas launch replaces the sketch, the M fold
+        # and update_c when the hook accepts (None = trace-time decline).
+        fast = ops.panel_kernel(state.ctx, state.C, state.M, A_L, off)
+    if fast is not None:
+        ctx, C, M, sc_a, scores = fast
     else:
-        ctx, sc_a, scores = state.ctx, S_C.apply(A_L), None
-    M = state.M + S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
+        S_C, S_R = ops.core_sketches(state.ctx)
+        if ops.sketch_panel is not None:
+            # fused path: the application computes sc_a together with its
+            # per-column scores (one pass; see kernels.panel_score on TPU)
+            ctx, sc_a, scores = ops.sketch_panel(state.ctx, A_L, off)
+        else:
+            ctx, sc_a, scores = state.ctx, S_C.apply(A_L), None
+        M = state.M + S_R.cols(off, L).apply_t(sc_a).astype(state.M.dtype)
 
-    if scores is None:
-        ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off)
-    else:
-        ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off, scores)
+        if scores is None:
+            ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off)
+        else:
+            ctx, C = ops.update_c(ctx, state.C, A_L, sc_a, off, scores)
     if ops.symmetric:
         R = state.R  # tied operand: R = Cᵀ is derived, nothing to accumulate
     elif ops.update_r is not None:
@@ -363,7 +408,80 @@ def panel_update(state: PanelState, A_L: jax.Array) -> PanelState:
 jitted_panel_update = jax.jit(panel_update)
 
 
-def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
+def _fused_route_ok(state: PanelState) -> bool:
+    """Static (trace-time) check: may this state take the fused scan body?
+
+    Requires the ops to have opted in (``chunk_fold``), an un-armed
+    quarantine guard (the in-scan NaN zero-scaling is inherently per-panel
+    — chaos parity stays on the legacy body), and the ops' own
+    ``supports_fused`` predicate to accept the ctx.
+    """
+    ops = state.ops
+    return (
+        ops.chunk_fold is not None
+        and state.quarantined is None
+        and (ops.supports_fused is None or ops.supports_fused(state.ctx))
+    )
+
+
+def _fused_scan(
+    state: PanelState, block: jax.Array, bcol0, window: jax.Array,
+    num_panels: int, panel: int,
+) -> PanelState:
+    """Fused scan body (Route A): chunk-hoisted sketch + thin per-panel loop.
+
+    The legacy scan body re-slices the (m × L) panel out of the operand and
+    re-applies ``S_C`` to it every step — O(m·L) HBM traffic per panel for
+    data whose per-panel products are tiny. Here the chunk sketch
+    ``sca = S_C.apply(window)`` is computed ONCE per chunk (exactly the
+    per-panel sketches side by side: every supported sketch family's
+    ``apply`` is column-independent), all panel-invariant factor writes are
+    folded once by ``ops.chunk_fold``, and the scan body shrinks to an
+    (s_c × L) slice of ``sca``, the per-panel ``M`` fold — kept per panel
+    so the fp32 summation order matches the per-panel oracle — and the
+    ops' ``fused_step`` (admission policies; None for fixed-index ops).
+
+    ``window`` is the contiguous (m × num_panels·panel) column range being
+    consumed (``block`` itself for chunk operands, a dynamic window slice
+    for full-stream operands); ``block``/``bcol0`` are forwarded to the
+    hooks so per-panel candidate gathers index the un-copied operand.
+    """
+    ops = state.ops
+    start = state.offset
+    S_C, S_R = ops.core_sketches(state.ctx)
+    sca = S_C.apply(window)  # (s_c, width) — all panel sketches, one pass
+    ctx, C, R = ops.chunk_fold(
+        state.ctx, state.C, state.R, block, bcol0, start, num_panels * panel
+    )
+    has_tel = ops.telemetry is not None and state.tel is not None
+    # telemetry hooks read A_L's static shape only (see PanelOps.telemetry)
+    placeholder = jnp.zeros((0, panel), block.dtype)
+
+    def body(carry, t):
+        ctx, C, M, tel = carry
+        off = start + t * panel
+        sc_a = jax.lax.dynamic_slice_in_dim(sca, t * panel, panel, axis=1)
+        M = M + S_R.cols(off, panel).apply_t(sc_a).astype(M.dtype)
+        ctx_pre, scores = ctx, None
+        if ops.fused_step is not None:
+            ctx, C, scores = ops.fused_step(
+                ctx, C, block, bcol0 + t * panel, sc_a, off
+            )
+        if has_tel:
+            tel = ops.telemetry(tel, ctx_pre, ctx, placeholder, sc_a, scores, off)
+        return (ctx, C, M, tel), None
+
+    (ctx, C, M, tel), _ = jax.lax.scan(
+        body, (ctx, C, state.M, state.tel), jnp.arange(num_panels, dtype=jnp.int32)
+    )
+    return dataclasses.replace(
+        state, C=C, R=R, M=M, offset=start + num_panels * panel, ctx=ctx, tel=tel
+    )
+
+
+def scan_chunk(
+    state: PanelState, A_chunk: jax.Array, panel: int, *, fused: bool = True
+) -> PanelState:
     """Consume a pre-padded chunk (width = whole panels) via one ``lax.scan``.
 
     Traceable core of the compiled streaming path: the whole chunk becomes a
@@ -376,6 +494,10 @@ def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
     :func:`panel_update`. The chunk is indexed *relative* to its own first
     column — use :func:`scan_panels` when the operand is the full stream
     array (no chunk copy).
+
+    ``fused`` (static) selects the fused scan body (:func:`_fused_scan`)
+    when the ops support it; pass ``False`` to force the legacy per-panel
+    body (the census tooling compares the two compiled programs).
     """
     num_panels = A_chunk.shape[1] // panel
     if state.ops.telemetry is not None and state.tel is not None:
@@ -392,6 +514,9 @@ def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
             state, tel=fold_psi_chunk(state.tel, psi_in, state.offset)
         )
 
+    if fused and _fused_route_ok(state):
+        return _fused_scan(state, A_chunk, 0, A_chunk, num_panels, panel)
+
     def body(st, t):
         A_L = jax.lax.dynamic_slice_in_dim(A_chunk, t * panel, panel, axis=1)
         return panel_update(st, A_L), None
@@ -400,7 +525,9 @@ def scan_chunk(state: PanelState, A_chunk: jax.Array, panel: int) -> PanelState:
     return state
 
 
-def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) -> PanelState:
+def scan_panels(
+    state: PanelState, A: jax.Array, num_panels: int, panel: int, *, fused: bool = True
+) -> PanelState:
     """Scan ``num_panels`` panels of the *full* ``A`` at the state's offset.
 
     Same loop as :func:`scan_chunk` but sliced at **absolute** offsets
@@ -409,6 +536,11 @@ def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) ->
     sharded-simulate path reads one shared ``A`` for every worker). Caller
     must guarantee ``offset + num_panels·panel ≤ A.shape[1]`` — ragged
     tails go through the zero-padded :func:`scan_chunk` path instead.
+
+    ``fused`` (static) selects the fused scan body (:func:`_fused_scan`)
+    when the ops support it, with the chunk sketch applied to the dynamic
+    window ``A[:, offset : offset + num_panels·panel]``; ``False`` forces
+    the legacy per-panel body.
     """
     offs = state.offset + jnp.arange(num_panels, dtype=jnp.int32) * panel
     if state.ops.telemetry is not None and state.tel is not None:
@@ -423,6 +555,12 @@ def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) ->
             state, tel=fold_psi_chunk(state.tel, block, state.offset)
         )
 
+    if fused and _fused_route_ok(state):
+        window = jax.lax.dynamic_slice_in_dim(
+            A, state.offset, num_panels * panel, axis=1
+        )
+        return _fused_scan(state, A, state.offset, window, num_panels, panel)
+
     def body(st, off):
         A_L = jax.lax.dynamic_slice_in_dim(A, off, panel, axis=1)
         return panel_update(st, A_L), None
@@ -436,16 +574,19 @@ def scan_panels(state: PanelState, A: jax.Array, num_panels: int, panel: int) ->
 # with buffer donation the input accumulators are reused for the output, so
 # streaming is allocation-free in steady state. Callers must not reuse the
 # input state afterwards (see module docstring).
-_scan_stream_chunk = jax.jit(scan_chunk, static_argnames="panel", donate_argnums=(0,))
+_scan_stream_chunk = jax.jit(
+    scan_chunk, static_argnames=("panel", "fused"), donate_argnums=(0,)
+)
 _scan_stream_panels = jax.jit(
-    scan_panels, static_argnames=("num_panels", "panel"), donate_argnums=(0,)
+    scan_panels, static_argnames=("num_panels", "panel", "fused"), donate_argnums=(0,)
 )
 
 _JIT_MODES = ("scan", "per-panel", True, False)
 
 
 def stream_panels(
-    state: PanelState, A: jax.Array, panel: int, *, stop: Optional[int] = None, jit="scan"
+    state: PanelState, A: jax.Array, panel: int, *, stop: Optional[int] = None,
+    jit="scan", fused: bool = True,
 ) -> PanelState:
     """Drive columns ``[offset, stop)`` of ``A`` through the engine in
     fixed-width panels, zero-padding the ragged tail. Host-side driver:
@@ -465,6 +606,11 @@ def stream_panels(
     sketches were extended with ``pad_cols`` at init: windows past the true
     column count are zero-scaled, and the padded columns of ``A_L`` are zero,
     so the padded block contributes nothing to C, R or M.
+
+    ``fused`` (static, scan modes only) forwards to
+    :func:`scan_chunk`/:func:`scan_panels`: ``True`` (default) takes the
+    fused scan body when the ops support it, ``False`` forces the legacy
+    per-panel body.
     """
     if jit not in _JIT_MODES:
         raise ValueError(f"jit must be one of {_JIT_MODES}, got {jit!r}")
@@ -485,10 +631,12 @@ def stream_panels(
         with span(f"stream/{state.ops.name}/scan"):
             if width == num_panels * panel:
                 # aligned: slice panels straight out of the shared A — no copy
-                return _scan_stream_panels(state, A, num_panels=num_panels, panel=panel)
+                return _scan_stream_panels(
+                    state, A, num_panels=num_panels, panel=panel, fused=fused
+                )
             chunk = A[:, start:stop]
             chunk = jnp.pad(chunk, ((0, 0), (0, num_panels * panel - width)))
-            return _scan_stream_chunk(state, chunk, panel=panel)
+            return _scan_stream_chunk(state, chunk, panel=panel, fused=fused)
     step = jitted_panel_update if jit == "per-panel" else panel_update
     with span(f"stream/{state.ops.name}/per-panel"):
         if state.ops.telemetry is not None and state.tel is not None:

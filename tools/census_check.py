@@ -1,0 +1,173 @@
+"""Scan-body HLO census gate: fused vs unfused streaming programs.
+
+Compiles the engine's ``scan_chunk`` with ``fused=True`` and ``fused=False``
+on two small reference configs (fixed-index streaming CUR, adaptive CUR with
+fixed rows — the acceptance config of the fused-megakernel PR), runs the
+loop-aware census of :mod:`repro.launch.hlo_census` on both programs, and
+fails (exit 1) when:
+
+  * the fused scan body's HBM bytes-per-panel is not at least 25 % below
+    the unfused body's (``scan_body_bytes_per_panel`` — the steady-state
+    marginal traffic of one scan iteration; the chunk-hoisted sketch is
+    amortized prologue and is gated separately via the whole-program
+    number), or
+  * the fused whole-program bytes-per-panel exceeds the unfused one
+    (the hoist must never cost more than it saves), or
+  * any censused number (bytes-per-panel, scan-body bytes-per-panel,
+    weighted top-level op count) exceeds its committed budget in
+    ``benchmarks/baselines/census_budget.json`` by more than the
+    tolerance (default 10 % — the census parses compiled HLO text, which
+    shifts slightly across XLA versions).
+
+The census is structural (compiled-program analysis, no execution), so the
+gate is wall-clock- and host-invariant. Regenerate the budgets after an
+intentional change with::
+
+  PYTHONPATH=src python tools/census_check.py --update
+
+Wired into ``make census-check`` and CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+BUDGET_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "baselines", "census_budget.json",
+)
+
+# committed gate constants
+FUSED_BODY_MAX_RATIO = 0.75  # fused scan body must be >=25% leaner
+TOLERANCE = 0.10  # budget slack for cross-version HLO-text drift
+
+METRICS = ("bytes_per_panel", "scan_body_bytes_per_panel", "n_ops", "scan_body_n_ops")
+
+
+def _configs():
+    """(name, state, A, panel) for the censused reference programs."""
+    from repro.cur.streaming import streaming_cur_init
+    from repro.stream.adaptive import adaptive_cur_init
+
+    out = []
+
+    # Fixed-index streaming CUR, small: the chunk_fold removes ALL factor
+    # writes from the scan body (pure copies folded once per chunk).
+    m, n, panel, c, r = 512, 512, 128, 16, 16
+    key = jax.random.PRNGKey(0)
+    st = streaming_cur_init(
+        key, m, n,
+        col_idx=jnp.arange(c, dtype=jnp.int32),
+        row_idx=jnp.arange(r, dtype=jnp.int32),
+        sketch="countsketch", panel=panel,
+    )
+    out.append((f"streaming_cur/{m}x{n}_p{panel}_c{c}", st, jnp.zeros((m, n), jnp.float32), panel))
+
+    # Adaptive CUR, fixed rows — the acceptance config of the fused
+    # panel-update PR: m=2048, n=1024, panel=256, c=r=16, panel_cap=4,
+    # countsketch core sketches (s_c=s_r=240 via the Table-2 defaults).
+    m, n, panel, c, r = 2048, 1024, 256, 16, 16
+    st = adaptive_cur_init(
+        jax.random.PRNGKey(1), m, n, c,
+        row_idx=jnp.arange(r, dtype=jnp.int32),
+        panel_cap=4, sketch="countsketch", panel=panel,
+    )
+    out.append((f"adaptive_cur/{m}x{n}_p{panel}_c{c}", st, jnp.zeros((m, n), jnp.float32), panel))
+    return out
+
+
+def measure() -> dict:
+    from repro.launch.hlo_census import census_stream_program
+
+    results = {}
+    for name, st, A, panel in _configs():
+        pair = {}
+        for fused in (True, False):
+            cen = census_stream_program(st, A, panel, fused=fused)
+            pair["fused" if fused else "unfused"] = {k: cen[k] for k in METRICS}
+        results[name] = pair
+    return results
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="write the measured numbers as the new committed budget")
+    args = ap.parse_args()
+
+    results = measure()
+    failures = []
+
+    for name, pair in results.items():
+        f, u = pair["fused"], pair["unfused"]
+        body_ratio = f["scan_body_bytes_per_panel"] / max(u["scan_body_bytes_per_panel"], 1.0)
+        total_ratio = f["bytes_per_panel"] / max(u["bytes_per_panel"], 1.0)
+        print(f"{name}:")
+        print(f"  scan-body bytes/panel   fused {f['scan_body_bytes_per_panel']:.3e}  "
+              f"unfused {u['scan_body_bytes_per_panel']:.3e}  ratio {body_ratio:.3f}")
+        print(f"  whole-program bytes/panel fused {f['bytes_per_panel']:.3e}  "
+              f"unfused {u['bytes_per_panel']:.3e}  ratio {total_ratio:.3f}")
+        print(f"  n_ops fused {f['n_ops']:.0f} unfused {u['n_ops']:.0f}  "
+              f"scan-body n_ops fused {f['scan_body_n_ops']:.0f} unfused {u['scan_body_n_ops']:.0f}")
+        if body_ratio > FUSED_BODY_MAX_RATIO:
+            failures.append(
+                f"{name}: fused scan-body bytes/panel ratio {body_ratio:.3f} "
+                f"> {FUSED_BODY_MAX_RATIO} (fused body must be >=25% leaner)"
+            )
+        if total_ratio > 1.0:
+            failures.append(
+                f"{name}: fused whole-program bytes/panel ratio {total_ratio:.3f} > 1.0 "
+                "(the chunk hoist must not cost more than it saves)"
+            )
+
+    if args.update:
+        budget = {
+            "fused_body_max_ratio": FUSED_BODY_MAX_RATIO,
+            "tolerance": TOLERANCE,
+            "configs": results,
+        }
+        os.makedirs(os.path.dirname(BUDGET_PATH), exist_ok=True)
+        with open(BUDGET_PATH, "w") as fh:
+            json.dump(budget, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {BUDGET_PATH}")
+    elif not os.path.exists(BUDGET_PATH):
+        failures.append(
+            f"no committed budget at {BUDGET_PATH} — run with --update and commit it"
+        )
+    else:
+        with open(BUDGET_PATH) as fh:
+            budget = json.load(fh)
+        tol = budget.get("tolerance", TOLERANCE)
+        for name, pair in results.items():
+            committed = budget.get("configs", {}).get(name)
+            if committed is None:
+                failures.append(f"{name}: missing from committed budget — rerun --update")
+                continue
+            for variant in ("fused", "unfused"):
+                for metric in METRICS:
+                    fresh = pair[variant][metric]
+                    limit = committed[variant][metric] * (1.0 + tol)
+                    if fresh > limit:
+                        failures.append(
+                            f"{name}/{variant}/{metric}: {fresh:.4e} exceeds committed "
+                            f"{committed[variant][metric]:.4e} (+{tol:.0%} tol)"
+                        )
+
+    if failures:
+        print("\nCENSUS GATE FAILURES:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\ncensus gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
